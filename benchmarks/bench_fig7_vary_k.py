@@ -1,0 +1,30 @@
+"""Figure 7: quality & runtime vs number of partitions k (Parsa improves
+with k while bisection-family degrades)."""
+from __future__ import annotations
+
+from repro.core import sequential_parsa
+
+from .baselines import powergraph_greedy, recursive_bisection
+from .common import datasets, emit, score, timed
+
+
+def run(scale: float = 0.7):
+    rows = []
+    data = datasets(scale)
+    for dname in ("ctr-like", "social-lj-like"):
+        g = data[dname]
+        for k in (8, 16, 32, 64):
+            for mname, fn in {
+                "parsa": lambda: sequential_parsa(g, k, b=8, a=8, seed=0),
+                "powergraph": lambda: powergraph_greedy(g, k, seed=0),
+                "bisection": lambda: recursive_bisection(g, k, seed=0),
+            }.items():
+                parts, dt = timed(fn)
+                rows.append({"dataset": dname, "method": mname, "k": k,
+                             "time_s": dt, **score(g, parts, k)})
+    emit(rows, "fig7_vary_k")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

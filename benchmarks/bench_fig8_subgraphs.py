@@ -1,0 +1,28 @@
+"""Figure 8: subgraph count b × initialization fraction a/b (single thread).
+Reproduces: more init data ⇒ better quality; small subgraphs + init beat
+b=1; runtime grows with a."""
+from __future__ import annotations
+
+from repro.core import sequential_parsa
+
+from .common import datasets, emit, score, timed
+
+
+def run(scale: float = 0.6, k: int = 16):
+    rows = []
+    data = datasets(scale)
+    for dname in ("ctr-like", "social-lj-like"):
+        g = data[dname]
+        for b in (1, 4, 16):
+            for frac in (0.0, 0.5, 1.0, 2.0):      # a/b
+                a = int(b * frac)
+                parts, dt = timed(
+                    lambda: sequential_parsa(g, k, b=b, a=a, seed=0))
+                rows.append({"dataset": dname, "b": b, "init_frac": frac,
+                             "a": a, "time_s": dt, **score(g, parts, k)})
+    emit(rows, "fig8_subgraphs")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Figure 9: parallel partitioning quality vs % of data used for global
+initialization (4 workers)."""
+from __future__ import annotations
+
+from repro.core import ParallelParsa, global_initialization
+
+from .common import datasets, emit, score, timed
+
+
+def run(scale: float = 0.6, k: int = 16):
+    rows = []
+    g = datasets(scale)["ctr-like"]
+    for frac in (0.0, 0.001, 0.01, 0.1):
+        def go():
+            S0 = (global_initialization(g, k, sample_frac=frac, seed=0)
+                  if frac > 0 else None)
+            pp = ParallelParsa(k, workers=4, tau=None, seed=0)
+            return pp.run(g, b=16, init_sets=S0)
+        rep, dt = timed(go)
+        rows.append({"init_frac_pct": frac * 100, "time_s": dt,
+                     "pushed_bytes": rep.pushed_bytes,
+                     **score(g, rep.parts_u, k)})
+    emit(rows, "fig9_global_init")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks (CPU: correctness-scale timings of the jitted
+wrappers; the Pallas bodies execute in interpret mode — wall numbers are NOT
+TPU-representative, the roofline table is)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.parsa_cost import pack_bitmask, parsa_cost, parsa_cost_ref
+
+from .common import emit
+
+
+def _bench(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    # parsa_cost: ref vs kernel(interpret)
+    num_v, U, K = 4096, 512, 16
+    nbr = jnp.asarray(pack_bitmask(
+        [rng.choice(num_v, size=40, replace=False) for _ in range(U)], num_v))
+    s = jnp.asarray(pack_bitmask(rng.random((K, num_v)) < 0.2, num_v))
+    rows.append({"name": "parsa_cost_ref_jnp", "us_per_call":
+                 _bench(lambda a, b: parsa_cost_ref(a, b), nbr, s),
+                 "derived": f"U={U},K={K},V={num_v}"})
+    rows.append({"name": "parsa_cost_pallas_interpret", "us_per_call":
+                 _bench(lambda a, b: parsa_cost(a, b), nbr, s),
+                 "derived": "correctness-scale only"})
+    # flash attention
+    B, S, H, D = 1, 512, 4, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    rows.append({"name": "attention_ref_jnp", "us_per_call":
+                 _bench(lambda a, b, c: attention_ref(a, b, c), q, k, v),
+                 "derived": f"B={B},S={S},H={H},D={D}"})
+    rows.append({"name": "flash_attention_interpret", "us_per_call":
+                 _bench(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
+                        q, k, v),
+                 "derived": "correctness-scale only"})
+    emit(rows, "kernels")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Table 2: Parsa vs baselines on the dataset analogues — improvement % over
+random on M_max / T_max / T_sum + runtime."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import sequential_parsa
+from repro.core.jax_partition import blocked_partition_u
+
+from .baselines import powergraph_greedy, recursive_bisection
+from .common import datasets, emit, score, timed
+
+
+def run(scale: float = 1.0, k: int = 16, trials: int = 3):
+    rows = []
+    for dname, g in datasets(scale).items():
+        methods = {
+            "parsa": lambda g=g: sequential_parsa(g, k, b=16, a=16, seed=0),
+            "parsa-tpu-blocked": lambda g=g: blocked_partition_u(
+                g, k, block=256, use_kernel=False),
+            "powergraph": lambda g=g: powergraph_greedy(g, k, seed=0),
+            "bisection": lambda g=g: recursive_bisection(g, k, seed=0),
+        }
+        for mname, fn in methods.items():
+            scores, ts = [], []
+            for t in range(trials if mname.startswith("parsa") else 1):
+                parts, dt = timed(fn)
+                scores.append(score(g, parts, k, seed=t))
+                ts.append(dt)
+            agg = {kk: float(np.mean([s[kk] for s in scores]))
+                   for kk in scores[0]}
+            rows.append({"dataset": dname, "method": mname,
+                         "time_s": float(np.mean(ts)), **agg})
+    emit(rows, "table2")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Shared benchmark plumbing: dataset analogues (Table 1 scaled to one CPU
+core), metric helpers, CSV emission."""
+from __future__ import annotations
+
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import evaluate, improvement, partition_v, random_parts
+from repro.graphs import ctr_like, natural_to_bipartite, social_like, text_like
+
+OUT = pathlib.Path(__file__).resolve().parent / "out"
+OUT.mkdir(exist_ok=True)
+
+
+def datasets(scale: float = 1.0) -> dict:
+    """Synthetic analogues of Table 1, scaled for a single CPU core."""
+    s = scale
+    src, dst, n = social_like(int(1500 * s), m=8, seed=2)
+    src2, dst2, n2 = social_like(int(1200 * s), m=12, seed=3)
+    return {
+        "rcv1-like": text_like(int(1600 * s), int(4000 * s), mean_len=60, seed=1),
+        "news20-like": text_like(int(900 * s), int(8000 * s), mean_len=80,
+                                 zipf_s=1.05, seed=2),
+        "ctr-like": ctr_like(int(1500 * s), int(6000 * s), nnz_per_row=25, seed=3),
+        "social-lj-like": natural_to_bipartite(src, dst, n),
+        "social-orkut-like": natural_to_bipartite(src2, dst2, n2),
+    }
+
+
+def score(graph, parts_u, k, seed=0):
+    """(M_max, T_max, T_sum) improvements vs random — Table 2 columns."""
+    pv = partition_v(graph, parts_u, k, sweeps=2)
+    m = evaluate(graph, parts_u, pv, k)
+    mr = evaluate(graph, random_parts(graph.num_u, k, seed),
+                  random_parts(graph.num_v, k, seed + 1), k)
+    return {
+        "M_max_improv_pct": improvement(mr.mem_max, m.mem_max),
+        "T_max_improv_pct": improvement(mr.traffic_max, m.traffic_max),
+        "T_sum_improv_pct": improvement(mr.traffic_sum, m.traffic_sum),
+        "traffic_max": m.traffic_max,
+        "mem_max": m.mem_max,
+    }
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def emit(rows: list[dict], name: str):
+    """CSV: name,us_per_call,derived columns."""
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    path = OUT / f"{name}.csv"
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(f"{r[c]:.4g}" if isinstance(r[c], float)
+                             else str(r[c]) for c in keys) + "\n")
+    print(f"# wrote {path}")
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in keys))

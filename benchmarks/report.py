@@ -1,0 +1,189 @@
+"""Roofline report generator: reads benchmarks/out/dryrun/*.json and emits
+the §Dry-run and §Roofline tables for EXPERIMENTS.md.
+
+Two memory terms are reported:
+  * t_mem(HLO)      — `bytes accessed` from the CPU-backend compile.  The
+    CPU pipeline barely fuses, so every elementwise intermediate round-trips
+    through "memory"; on TPU these chains fuse.  Kept because the prompt's
+    formula asks for it — treat as a pessimistic bound.
+  * t_mem(analytic) — minimum-traffic model of the fused TPU execution:
+    weight-shard reads per pass (×3 for fwd/bwd/remat, ×microbatches),
+    optimizer state read/write, saved activations at remat boundaries,
+    KV-cache sweeps for decode, logits.  Used for the bottleneck call and
+    the roofline fraction (§Perf iterates on whichever term dominates).
+
+Run:  PYTHONPATH=src python -m benchmarks.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+HW = {"peak": 197e12, "hbm": 819e9, "ici": 50e9}
+DRY = pathlib.Path(__file__).resolve().parent / "out" / "dryrun"
+
+SHAPE_INFO = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _mesh_sizes(mesh_name: str):
+    parts = [int(x) for x in mesh_name.split("x")]
+    tp = parts[-1]
+    dp = int(np.prod(parts[:-1]))
+    return dp, tp
+
+
+def analytic_hbm_bytes(cell: dict, cfg_extra: dict) -> float:
+    """Fused-execution HBM traffic model, per device per step."""
+    from repro.configs import get_config
+
+    cfg = get_config(cell["arch"])
+    info = SHAPE_INFO[cell["shape"]]
+    dp, tp = _mesh_sizes(cell["mesh"])
+    N, Na = cell["params_total"], cell["params_active"]
+    B, S = info["batch"], info["seq"]
+    D, L, V = cfg.d_model, cfg.num_layers, cfg.padded_vocab
+    tok_local = max(B // dp, 1) * S
+    state_shards = tp * (dp if cfg.fsdp else 1)
+    opt_b = 2 if cfg.opt_dtype == "bfloat16" else 4
+
+    if info["kind"] == "train":
+        n_micro = max(cfg.microbatches, 1)
+        weights = 3 * (N * 2 / tp) * n_micro          # fwd+bwd+remat, bf16
+        opt = (2 * 4 + 4 * opt_b + 2 * 4) * N / state_shards
+        acts = 6 * L * (tok_local / n_micro) * D * 2 * n_micro
+        logits = 3 * tok_local * (V / tp) * 4
+        return weights + opt + acts + logits
+    if info["kind"] == "prefill":
+        weights = N * 2 / tp
+        acts = 4 * L * tok_local * D * 2
+        cache = L * tok_local * 2 * cfg.num_kv_heads * cfg.head_dim * 2 \
+            if not cfg.mla else L * tok_local * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+        logits = tok_local * (V / tp) * 2
+        return weights + acts + cache + logits
+    # decode
+    weights = Na * 2 / tp
+    b_local = max(B // dp, 1)
+    if cfg.family == "xlstm":
+        G = L // cfg.xlstm_group
+        cache = G * (cfg.xlstm_group - 1) * b_local * cfg.num_heads \
+            * cfg.head_dim * cfg.head_dim * 4 * 2 / tp
+    elif cfg.family == "hybrid":
+        G = L // cfg.hybrid_group
+        d_in = cfg.ssm_expand * D
+        Hs = d_in // cfg.ssm_headdim
+        cache = G * (cfg.hybrid_group - 1) * b_local * Hs * cfg.ssm_headdim \
+            * cfg.ssm_state * 2 * 2 / tp
+        cache += G * b_local * min(S, 2**30) * 2 * cfg.num_kv_heads * cfg.head_dim * 2 / tp
+    elif cfg.mla:
+        cache = L * b_local * S * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2 / tp
+    else:
+        eff_S = min(S, cfg.swa_window) if cfg.swa_window else S
+        kv_shard = tp if cfg.num_kv_heads % tp == 0 else \
+            (tp if cfg.head_dim % tp == 0 else 1)
+        cache = L * b_local * eff_S * 2 * cfg.num_kv_heads * cfg.head_dim * 2 / kv_shard
+    return weights + cache
+
+
+def load_cells(mesh: str | None = None):
+    cells = []
+    for p in sorted(DRY.glob("*.json")):
+        d = json.loads(p.read_text())
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def build_rows(mesh: str):
+    rows = []
+    for c in load_cells(mesh):
+        if c["status"] == "skip":
+            rows.append({"arch": c["arch"], "shape": c["shape"], "mesh": mesh,
+                         "status": "skip", "reason": c.get("reason", "")})
+            continue
+        if c["status"] != "ok":
+            rows.append({"arch": c["arch"], "shape": c["shape"], "mesh": mesh,
+                         "status": "fail", "reason": c.get("error", "")})
+            continue
+        r = c["roofline"]
+        t_c = r["t_compute_s"]
+        t_m_hlo = r["t_memory_s"]
+        mem_an = analytic_hbm_bytes(c, {})
+        t_m_an = mem_an / HW["hbm"]
+        t_x = r["t_collective_s"]
+        terms = {"compute": t_c, "memory": t_m_an, "collective": t_x}
+        bneck = max(terms, key=terms.get)
+        ideal = r["model_flops"] / r["chips"] / HW["peak"]
+        frac = ideal / max(terms.values()) if max(terms.values()) else 0.0
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": mesh, "status": "ok",
+            "mem_GiB": r["peak_memory_per_device"] / 2**30,
+            "t_compute_ms": t_c * 1e3,
+            "t_mem_hlo_ms": t_m_hlo * 1e3,
+            "t_mem_analytic_ms": t_m_an * 1e3,
+            "t_collective_ms": t_x * 1e3,
+            "bottleneck": bneck,
+            "useful_ratio": r["useful_ratio"],
+            "roofline_frac": frac,
+            "roofline_frac_hlo": r["roofline_fraction"],
+            "wire_GB": r["wire_bytes_per_device"] / 1e9,
+            "compile_s": c.get("compile_s", 0),
+        })
+    return rows
+
+
+def markdown(rows, mesh):
+    out = [f"\n### Mesh {mesh}\n",
+           "| arch | shape | status | mem/dev GiB | t_comp ms | t_mem(HLO) ms | "
+           "t_mem(model) ms | t_coll ms | bottleneck | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                       f"{r.get('reason','')[:60]} | | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['mem_GiB']:.1f} | "
+            f"{r['t_compute_ms']:.2f} | {r['t_mem_hlo_ms']:.1f} | "
+            f"{r['t_mem_analytic_ms']:.2f} | {r['t_collective_ms']:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.1%} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    meshes = [args.mesh] if args.mesh else ["16x16", "2x16x16"]
+    for mesh in meshes:
+        rows = build_rows(mesh)
+        if not rows:
+            continue
+        if args.markdown:
+            print(markdown(rows, mesh))
+        else:
+            ok = [r for r in rows if r["status"] == "ok"]
+            print(f"\n=== {mesh}: {len(ok)} ok / {len(rows)} cells ===")
+            for r in rows:
+                if r["status"] == "ok":
+                    print(f"{r['arch']:22s} {r['shape']:12s} mem={r['mem_GiB']:7.1f}G "
+                          f"tc={r['t_compute_ms']:8.2f} tm={r['t_mem_analytic_ms']:8.2f} "
+                          f"tx={r['t_collective_ms']:8.2f} {r['bottleneck']:10s} "
+                          f"useful={r['useful_ratio']:5.2f} roof={r['roofline_frac']:6.1%}")
+                else:
+                    print(f"{r['arch']:22s} {r['shape']:12s} {r['status'].upper()} "
+                          f"{r.get('reason','')[:70]}")
+
+
+if __name__ == "__main__":
+    main()

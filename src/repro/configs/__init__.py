@@ -1,0 +1,24 @@
+"""Architecture registry: one module per assigned architecture."""
+from .base import ModelConfig, get_config, list_configs, register, REGISTRY  # noqa: F401
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (  # noqa: F401
+        codeqwen15_7b,
+        qwen3_14b,
+        command_r_35b,
+        nemotron_4_340b,
+        mixtral_8x22b,
+        deepseek_v2_236b,
+        whisper_medium,
+        xlstm_350m,
+        zamba2_2p7b,
+        internvl2_76b,
+        parsa_paper,
+    )

@@ -1,0 +1,140 @@
+r"""TPU-native Parsa: blocked greedy over packed bitmasks (DESIGN.md §2).
+
+The CPU algorithm's O(1) pointer updates don't map to TPU; instead we
+*recompute over blocks*: for a block of B candidate vertices we evaluate the
+full (B × k) cost tile with the parsa_cost Pallas kernel, then run a
+device-side greedy loop of B steps — each step picks the partition to grow
+(smallest size, Alg 1 line 7 / §4.1 perfect balance), selects the
+minimum-cost unassigned vertex *within the block*, commits it, ORs its
+neighbor mask into S_i, and down-dates only column i of the cost tile with
+one popcount pass (cost never increases — same monotonicity the bucket
+queue exploits).
+
+Block-local greedy is a sampling approximation in exactly the sense of §4.2
+(a block plays the role of a subgraph R); quality deltas vs the sequential
+reference are measured in benchmarks/bench_table2.py.
+
+``shard_parsa`` maps Alg 4 onto shard_map: each device on the ``data`` axis
+partitions its own U-shard block-by-block against a device-local *stale*
+bitmask copy; every ``merge_every`` blocks an all_gather + OR merges the
+sets — the bulk-synchronous image of the parameter server's union-push
+(server line 9), with τ == merge_every − 1 blocks of staleness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.parsa_cost import pack_bitmask, parsa_cost
+from .bipartite import BipartiteGraph
+
+__all__ = ["blocked_partition_u", "shard_parsa_step", "pack_graph_blocks"]
+
+
+def pack_graph_blocks(graph: BipartiteGraph, block: int) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Split U into contiguous blocks and pack each block's neighbor bitmasks."""
+    out = []
+    for start in range(0, graph.num_u, block):
+        ids = np.arange(start, min(start + block, graph.num_u))
+        masks = pack_bitmask([graph.neighbors(int(u)) for u in ids], graph.num_v)
+        out.append((ids, masks))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel", "interpret"))
+def _assign_block(
+    nbr: jax.Array,        # (B, W) int32 packed N(u)
+    s_masks: jax.Array,    # (k, W) int32 packed S_i
+    sizes: jax.Array,      # (k,) int32 |U_i|
+    *,
+    k: int,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Greedy-assign every vertex in the block. Returns (parts, S', sizes')."""
+    B, W = nbr.shape
+    cost = parsa_cost(nbr, s_masks, use_kernel=use_kernel, interpret=interpret)  # (B, k)
+    BIG = jnp.int32(2**30)
+
+    def step(state, _):
+        cost, s_masks, sizes, parts = state
+        i = jnp.argmin(sizes)  # partition to grow (perfect balance)
+        u = jnp.argmin(cost[:, i])  # cheapest unassigned vertex in block
+        mask_u = nbr[u]
+        delta = mask_u & ~s_masks[i]
+        new_si = s_masks[i] | mask_u
+        # down-date column i only: cost never increases (§4.1)
+        dec = jax.lax.population_count(nbr & delta[None, :]).astype(jnp.int32).sum(-1)
+        cost = cost.at[:, i].add(-dec)
+        cost = cost.at[u, :].set(BIG)  # retire u from the block
+        s_masks = s_masks.at[i].set(new_si)
+        sizes = sizes.at[i].add(1)
+        parts = parts.at[u].set(i.astype(jnp.int32))
+        return (cost, s_masks, sizes, parts), None
+
+    parts0 = jnp.full((B,), -1, jnp.int32)
+    (cost, s_masks, sizes, parts), _ = jax.lax.scan(
+        step, (cost, s_masks, sizes, parts0), None, length=B
+    )
+    return parts, s_masks, sizes
+
+
+def blocked_partition_u(
+    graph: BipartiteGraph,
+    k: int,
+    block: int = 256,
+    init_sets: np.ndarray | None = None,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """Host-driven blocked greedy partition (single 'device'). Returns parts_u."""
+    W = (graph.num_v + 31) // 32
+    if init_sets is None:
+        s_masks = jnp.zeros((k, W), jnp.int32)
+    else:
+        s_masks = jnp.asarray(pack_bitmask(np.asarray(init_sets, bool), graph.num_v))
+    sizes = jnp.zeros((k,), jnp.int32)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(graph.num_u)
+    parts = np.full(graph.num_u, -1, np.int32)
+    for start in range(0, graph.num_u, block):
+        ids = order[start : start + block]
+        masks = pack_bitmask([graph.neighbors(int(u)) for u in ids], graph.num_v)
+        p, s_masks, sizes = _assign_block(
+            jnp.asarray(masks), s_masks, sizes,
+            k=k, use_kernel=use_kernel, interpret=interpret,
+        )
+        parts[ids] = np.asarray(p)
+    return parts
+
+
+def shard_parsa_step(k: int, axis: str = "data", use_kernel: bool = False):
+    """Return a shard_map-able body: (local nbr blocks, S, sizes) → assignment.
+
+    Each device processes its (n_blocks, B, W) stack of packed blocks against
+    its local S copy, then merges S across ``axis`` by all_gather + OR and
+    sizes by psum — one Alg 4 round with τ = n_blocks − 1.
+    """
+
+    def body(nbr_blocks: jax.Array, s_masks: jax.Array, sizes: jax.Array):
+        def per_block(carry, nbr):
+            s_masks, sizes = carry
+            parts, s_masks, sizes = _assign_block(
+                nbr, s_masks, sizes, k=k, use_kernel=use_kernel
+            )
+            return (s_masks, sizes), parts
+
+        (s_masks, sizes), parts = jax.lax.scan(per_block, (s_masks, sizes), nbr_blocks)
+        # server union-push: OR-merge neighbor sets across the data axis
+        gathered = jax.lax.all_gather(s_masks, axis)  # (n_dev, k, W)
+        merged = jax.lax.reduce(
+            gathered, jnp.int32(0), jax.lax.bitwise_or, dimensions=(0,)
+        )
+        sizes = jax.lax.psum(sizes, axis)
+        return parts, merged, sizes
+
+    return body

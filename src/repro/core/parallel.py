@@ -1,0 +1,146 @@
+r"""Algorithm 4: parallel Parsa on a (simulated) parameter server (§4.3–4.5).
+
+Roles:
+  * scheduler — divides G into b subgraphs, issues (a, τ, init) then
+    (b, τ, ¬init) rounds;
+  * servers   — hold the shared neighbor sets S_i; pushes *replace* S during
+    initialization and *union* afterwards (Alg 4 server lines 6–10);
+  * workers   — pull S, partition their subgraph with Algorithm 3, push back
+    only the delta S_i^new \ S_i (Alg 4 worker line 9, traffic saving).
+
+Consistency: pushes are asynchronous with maximal delay τ (measured in
+tasks).  We simulate W concurrent workers deterministically: the pull for
+global task t observes every push from tasks finished before
+``t - staleness(t)``, where staleness models the W−1 in-flight peers plus an
+extra bounded delay drawn from [0, τ] (τ=None ⇒ eventual consistency: a
+worker never waits, it sees whatever has landed — modeled as the in-flight
+window only, pushes land immediately after their task).  §5.4's claim is
+that quality degrades ≤ ~5% under this staleness; benchmarks/bench_fig10
+reproduces the curve.
+
+This is the host-side runtime.  The TPU-native bulk-synchronous mapping of
+the same protocol (bitmask all-reduce OR == server union) lives in
+jax_partition.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .bipartite import BipartiteGraph
+from .costs import need_matrix
+from .partition_u import partition_u
+from .subgraphs import divide
+
+__all__ = ["ParallelParsa", "ParsaReport", "global_initialization"]
+
+
+@dataclasses.dataclass
+class ParsaReport:
+    parts_u: np.ndarray
+    pushed_bytes: int          # worker→server traffic (delta encoding)
+    pulled_bytes: int          # server→worker traffic
+    tasks: int
+    stale_pushes_missed: int   # how many pushes were invisible due to delay
+
+
+def global_initialization(
+    graph: BipartiteGraph,
+    k: int,
+    sample_frac: float = 0.01,
+    theta: int = 1000,
+    select: str = "size",
+    seed: int = 0,
+) -> np.ndarray:
+    """§4.4 global initialization: one worker partitions a small sample and
+    the resulting neighbor sets seed all workers."""
+    rng = np.random.default_rng(seed)
+    m = max(1, int(graph.num_u * sample_frac))
+    sample = np.sort(rng.choice(graph.num_u, size=m, replace=False))
+    sg = graph.subgraph_u(sample)
+    res = partition_u(sg, k, theta=theta, select=select, seed=seed)
+    return need_matrix(sg, res.parts_u, k)
+
+
+class ParallelParsa:
+    """Deterministic simulation of Alg 4 with W workers and max delay τ."""
+
+    def __init__(
+        self,
+        k: int,
+        workers: int = 4,
+        tau: int | None = 0,
+        theta: int = 1000,
+        select: str = "size",
+        seed: int = 0,
+    ):
+        self.k = k
+        self.workers = workers
+        self.tau = tau
+        self.theta = theta
+        self.select = select
+        self.seed = seed
+
+    def run(
+        self,
+        graph: BipartiteGraph,
+        b: int,
+        a: int = 0,
+        init_sets: np.ndarray | None = None,
+    ) -> ParsaReport:
+        k, W = self.k, self.workers
+        plan = divide(graph, b, seed=self.seed)
+        rng = np.random.default_rng(self.seed + 1)
+
+        S_server = (
+            np.zeros((k, graph.num_v), dtype=bool)
+            if init_sets is None
+            else np.asarray(init_sets, dtype=bool).copy()
+        )
+        parts_u = np.full(graph.num_u, -1, dtype=np.int32)
+        pushed = pulled = missed = 0
+
+        # pending pushes: list of (apply_at_task, replace?, delta_sets)
+        pending: list[tuple[int, bool, np.ndarray]] = []
+
+        def flush(now: int):
+            nonlocal S_server
+            still = []
+            for at, replace, delta in pending:
+                if at <= now:
+                    if replace:
+                        S_server = delta.copy()
+                    else:
+                        S_server |= delta
+                else:
+                    still.append((at, replace, delta))
+            pending[:] = still
+
+        schedule = [("init", t % b) for t in range(a)] + [("real", j) for j in range(b)]
+        for t, (mode, j) in enumerate(schedule):
+            flush(t)
+            missed += len(pending)  # pushes in flight ⇒ invisible to this pull
+            sg = plan.subgraphs[j]
+            # pull: only the slice of S touching this subgraph's V support
+            support = np.unique(sg.u_indices)
+            pulled += int(S_server[:, support].size // 8)  # bitmask bytes
+            S_local = S_server.copy()
+            res = partition_u(
+                sg, k, init_sets=S_local, theta=self.theta,
+                select=self.select, seed=self.seed + t,
+            )
+            if mode == "init":
+                new_sets = need_matrix(sg, res.parts_u, k)
+                delay = 1 if self.tau is None else 1 + int(rng.integers(0, self.tau + 1))
+                pending.append((t + delay, True, new_sets))
+            else:
+                parts_u[plan.blocks[j]] = res.parts_u
+                delta = res.neighbor_sets & ~S_local  # push only the change
+                pushed += int(delta.sum())  # set-delta entries (ids)
+                delay = 1 if self.tau is None else 1 + int(rng.integers(0, self.tau + 1))
+                # model W concurrent workers: a push lands after the in-flight
+                # window of W−1 peer tasks plus the bounded delay
+                pending.append((t + (W - 1) + delay, False, res.neighbor_sets))
+        flush(len(schedule) + max(1, W) + (self.tau or 0) + 2)
+        return ParsaReport(parts_u, pushed * 4, pulled, len(schedule), missed)

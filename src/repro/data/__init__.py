@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMData, ParsaShardedData  # noqa: F401

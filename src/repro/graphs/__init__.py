@@ -1,0 +1,6 @@
+from .synthetic import (  # noqa: F401
+    text_like,
+    ctr_like,
+    social_like,
+    natural_to_bipartite,
+)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+parsa_cost/       — packed-bitmask popcount vertex-cost kernel (the paper's
+                    §4.1 hot loop re-thought for VMEM; DESIGN.md §2)
+flash_attention/  — online-softmax blocked attention for 32k prefill
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper w/ padding + GQA/packing adapters) and ref.py (pure-jnp oracle);
+tests/test_kernels.py sweeps shapes/dtypes against the oracles in interpret
+mode (this container is CPU-only).
+"""

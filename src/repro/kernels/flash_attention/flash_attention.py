@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention (forward): online-softmax over KV blocks.
+
+TPU adaptation notes (vs the CUDA flash algorithm):
+  * blocks are (bq × d) / (bk × d) VMEM tiles with d the full head dim —
+    MXU matmuls are (bq, d)×(d, bk) and (bq, bk)×(bk, d), both 128-aligned;
+  * the running max/denominator (m, l) and the output accumulator live in
+    VMEM scratch, carried across the KV grid axis (sequential innermost
+    grid dim — the TPU analogue of the CUDA inner loop; no shared-memory /
+    warp-shuffle machinery exists or is needed);
+  * causal + sliding-window masking folds into block-index comparisons;
+    fully-masked KV blocks are skipped with @pl.when.
+
+Grid: (B, H, Sq/bq, Skv/bk), KV innermost.  VMEM per step (defaults
+bq=bk=256, d≤256 fp32): q 256 KiB + k/v 512 KiB + acc 256 KiB ≈ 1 MiB.
+
+Used for 32k prefill on TPU; the XLA chunked path (models/layers.py) is the
+CPU/dry-run fallback and the numerical reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, bq, bk, n_kv):
+    kv_idx = pl.program_id(3)
+    q_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_idx * bq
+    k_start = kv_idx * bk
+
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention_kernel(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, H, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    n_kv = Skv // bk
+    grid = (B, H, Sq // bq, n_kv)
+    kern = functools.partial(
+        _kernel, scale=1.0 / np.sqrt(D), causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""jit'd public wrapper: layout adaptation + GQA head expansion + padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Sq, H, D)   — model layout
+    k: jax.Array,   # (B, Skv, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention with GQA: kv heads broadcast to q heads; sequences
+    padded to block multiples (padding keys are masked by position)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    # (B, S, H, D) → (B, H, S, D)
+    qt, kt, vt = (t.swapaxes(1, 2) for t in (q, k, v))
+    bq_ = min(bq, Sq) if Sq % min(bq, Sq) == 0 else Sq
+    while Sq % bq_:
+        bq_ //= 2
+    bk_ = min(bk, k.shape[1])
+    while k.shape[1] % bk_:
+        bk_ //= 2
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window,
+        bq=max(bq_, 1), bk=max(bk_, 1), interpret=interpret)
+    return out.swapaxes(1, 2)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel (single head-group slice)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q (B,Sq,H,D), k/v (B,Skv,H,D) — same head count (GQA expansion done by
+    the caller).  fp32 softmax, output in q.dtype."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(D)
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # right-aligned positions
+    k_pos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+    return out

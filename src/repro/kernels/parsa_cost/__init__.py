@@ -1,0 +1,2 @@
+from .ops import parsa_cost, pack_bitmask  # noqa: F401
+from .ref import parsa_cost_ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""jit'd public wrapper for the parsa_cost kernel (padding + dispatch)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .parsa_cost import parsa_cost_kernel
+from .ref import parsa_cost_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack_bitmask(ids_per_row: list[np.ndarray] | np.ndarray, num_v: int) -> np.ndarray:
+    """Pack per-row V-id sets into (rows, ceil(num_v/32)) int32 bitmasks."""
+    W = (num_v + 31) // 32
+    if isinstance(ids_per_row, np.ndarray) and ids_per_row.ndim == 2:
+        # boolean membership matrix (rows, num_v)
+        rows = ids_per_row.shape[0]
+        pad = W * 32 - num_v
+        bits = np.pad(ids_per_row.astype(np.uint8), [(0, 0), (0, pad)])
+        packed = np.packbits(bits.reshape(rows, W * 4, 8), axis=-1, bitorder="little")
+        return np.ascontiguousarray(packed.reshape(rows, W, 4)).view(np.uint32).reshape(rows, W).view(np.int32)
+    out = np.zeros((len(ids_per_row), W), dtype=np.uint32)
+    for r, ids in enumerate(ids_per_row):
+        ids = np.asarray(ids, dtype=np.int64)
+        np.bitwise_or.at(out[r], ids // 32, np.uint32(1) << (ids % 32).astype(np.uint32))
+    return out.view(np.int32)
+
+
+def parsa_cost(
+    nbr_masks: jax.Array,
+    s_masks: jax.Array,
+    *,
+    bu: int = 256,
+    bw: int = 512,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """cost[u, i] = |N(u) \\ S_i| for packed int32 bitmasks.
+
+    Pads U to a multiple of ``bu`` and W to a multiple of ``bw`` (zero words
+    contribute zero popcount, so padding is exact), then dispatches to the
+    Pallas kernel (interpret mode off-TPU) or the jnp oracle.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    U, W = nbr_masks.shape
+    if not use_kernel:
+        return parsa_cost_ref(nbr_masks, s_masks)
+    bu_ = min(bu, max(8, 8 * ((U + 7) // 8)))
+    bw_ = min(bw, max(128, 128 * ((W + 127) // 128)))
+    pu = (-U) % bu_
+    pw = (-W) % bw_
+    nbr_p = jnp.pad(nbr_masks, [(0, pu), (0, pw)])
+    s_p = jnp.pad(s_masks, [(0, 0), (0, pw)])
+    out = parsa_cost_kernel(nbr_p, s_p, bu=bu_, bw=bw_, interpret=interpret)
+    return out[:U]

@@ -1,0 +1,14 @@
+r"""Pure-jnp oracle for the parsa_cost kernel.
+
+cost[u, i] = |N(u) \ S_i| = Σ_w popcount(nbr[u, w] & ~s[i, w])
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def parsa_cost_ref(nbr_masks: jax.Array, s_masks: jax.Array) -> jax.Array:
+    """nbr_masks (U, W) int32 bit-packs, s_masks (K, W) int32 → (U, K) int32."""
+    masked = nbr_masks[:, None, :] & ~s_masks[None, :, :]
+    return jax.lax.population_count(masked).astype(jnp.int32).sum(axis=-1)

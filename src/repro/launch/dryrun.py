@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Per cell, two kinds of compiles:
+
+  1. REAL artifact — the production config (scan-over-layers, remat):
+     proves sharding legality + collective support, and provides
+     ``memory_analysis()`` (scan gives correct liveness → the fits-on-chip
+     proof) and the compile itself.
+
+  2. CALIBRATION pair — the same model UNROLLED at 1 and 2 layer-units
+     (XLA's cost analysis counts a scan body ONCE, so FLOPs/bytes/wire from
+     the scanned module undercount by ~L; the two-point unrolled fit
+     m(u) = base + u·per_unit reconstructs true per-step totals:
+     total = base + L·per_unit).  Verified against 6·N·D in the report.
+
+Results cached per cell in benchmarks/out/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs import get_config, list_configs
+from ..models.model import SHAPES, build_model, input_specs, shape_applicable
+from .mesh import make_production_mesh, mesh_name
+from .roofline import Roofline, count_params, model_flops, parse_collectives
+from .sharding import batch_specs, opt_pspecs, param_pspecs, to_named
+from .steps import make_serve_step, make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "out" / "dryrun"
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        }
+    except Exception as e:
+        return {"error": repr(e)}
+
+
+def _cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {"flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "transcendentals": float(ca.get("transcendentals", 0.0))}
+    except Exception as e:
+        return {"error": repr(e)}
+
+
+def lower_and_compile(cfg, shape: str, mesh):
+    """One (config × shape × mesh) lowering; returns the compiled artifact."""
+    info = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    bspecs = batch_specs(cfg, specs, mesh)
+    P = jax.sharding.PartitionSpec
+    if info["kind"] == "prefill":
+        from .steps import make_prefill_step
+        from .sharding import cache_specs
+        model, step = make_prefill_step(cfg, mesh)
+        pshape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        pspec = param_pspecs(cfg, pshape, mesh)
+        if cfg.family in ("xlstm", "hybrid"):
+            out_sh = to_named(P(), mesh)
+        else:
+            out_shape = jax.eval_shape(step, pshape, specs)
+            dp_ax = bspecs["tokens"][0]
+            vocab_ax = "model" if cfg.padded_vocab % mesh.shape["model"] == 0 else None
+            out_sh = to_named((P(dp_ax, vocab_ax),
+                               cache_specs(cfg, out_shape[1], mesh)), mesh)
+        jitted = jax.jit(step, in_shardings=to_named((pspec, bspecs), mesh),
+                         out_shardings=out_sh)
+        with mesh:
+            return jitted.lower(pshape, specs).compile()
+    if info["kind"] == "train":
+        model, step, _, _ = make_train_step(cfg, mesh)
+        pshape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        pspec = param_pspecs(cfg, pshape, mesh)
+        from ..optim import AdamWConfig, init_opt_state
+        ocfg = AdamWConfig(moment_dtype=cfg.opt_dtype)
+        oshape = jax.eval_shape(lambda: init_opt_state(pshape, ocfg))
+        ospec = opt_pspecs(cfg, pshape, mesh)
+        in_sh = to_named((pspec, ospec, bspecs), mesh)
+        out_sh = to_named((pspec, ospec,
+                           {"loss": P(), "tokens": P(), "grad_norm": P()}), mesh)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1))
+        args = (pshape, oshape, specs)
+    else:
+        model, step = make_serve_step(cfg, mesh)
+        pshape = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        pspec = param_pspecs(cfg, pshape, mesh)
+        dp_ax = bspecs["token"][0]
+        vocab_ax = "model" if cfg.padded_vocab % mesh.shape["model"] == 0 else None
+        out_sh = to_named((P(dp_ax), P(dp_ax, vocab_ax), bspecs["cache"]), mesh)
+        jitted = jax.jit(step, in_shardings=to_named((pshape and pspec, bspecs), mesh),
+                         out_shardings=out_sh, donate_argnums=(1,))
+        args = (pshape, specs)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _calibration_cfgs(cfg):
+    """(unit_count, cfg_at(n_units)) for the two-point unrolled fit."""
+    if cfg.family == "xlstm":
+        per = cfg.xlstm_group
+        units = cfg.num_layers // per
+        mk = lambda n: dataclasses.replace(cfg, num_layers=n * per, scan_layers=False, microbatches=1)
+    elif cfg.family == "hybrid":
+        per = cfg.hybrid_group
+        units = cfg.num_layers // per
+        mk = lambda n: dataclasses.replace(cfg, num_layers=n * per, scan_layers=False, microbatches=1)
+    elif cfg.family == "encdec":
+        units = cfg.num_layers
+        mk = lambda n: dataclasses.replace(
+            cfg, num_layers=n, encoder_layers=n, scan_layers=False,
+            microbatches=1)
+    else:
+        units = cfg.num_layers
+        mk = lambda n: dataclasses.replace(cfg, num_layers=n, scan_layers=False, microbatches=1)
+    return units, mk
+
+
+def calibrate(cfg, shape: str, mesh) -> dict:
+    units, mk = _calibration_cfgs(cfg)
+    pts = {}
+    for n in (1, 2):
+        compiled = lower_and_compile(mk(n), shape, mesh)
+        cost = _cost_analysis_dict(compiled)
+        colls = parse_collectives(compiled.as_text())
+        pts[n] = {
+            "flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes", 0.0),
+            "wire": sum(c["wire_bytes"] for c in colls.values()),
+            "colls": colls,
+        }
+
+    def fit(key):
+        per = pts[2][key] - pts[1][key]
+        return pts[1][key] + (units - 1) * per
+
+    coll_total = {}
+    for kind in set(pts[1]["colls"]) | set(pts[2]["colls"]):
+        w1 = pts[1]["colls"].get(kind, {}).get("wire_bytes", 0.0)
+        w2 = pts[2]["colls"].get(kind, {}).get("wire_bytes", 0.0)
+        c1 = pts[1]["colls"].get(kind, {}).get("count", 0)
+        c2 = pts[2]["colls"].get(kind, {}).get("count", 0)
+        wt = w1 + (units - 1) * (w2 - w1)
+        ct = c1 + (units - 1) * (c2 - c1)
+        if ct > 0 and wt > 0:
+            coll_total[kind] = {"wire_bytes": wt, "count": int(ct)}
+    return {
+        "flops_per_device": fit("flops"),
+        "bytes_per_device": fit("bytes"),
+        "wire_bytes_per_device": fit("wire"),
+        "collectives": coll_total,
+        "units": units,
+        "points": {str(k): {kk: vv for kk, vv in v.items() if kk != "colls"}
+                   for k, v in pts.items()},
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             cfg_override=None, label: str | None = None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    ok, reason = shape_applicable(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mname = mesh_name(mesh)
+    cell = {"arch": label or arch, "shape": shape, "mesh": mname}
+    if not ok:
+        cell.update(status="skip", reason=reason)
+        return cell
+    info = SHAPES[shape]
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        compiled = lower_and_compile(cfg, shape, mesh)      # REAL artifact
+        t_real = time.time() - t0
+        mem = _mem_analysis_dict(compiled)
+        hlo_bytes = len(compiled.as_text())
+        del compiled
+        cal = calibrate(cfg, shape, mesh)                    # calibration pair
+        t_all = time.time() - t0
+
+        n_total, n_active = count_params(cfg)
+        mf = model_flops(cfg, info, n_total, n_active)
+        peak_mem = mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+        rl = Roofline(
+            arch=arch, shape=shape, mesh=mname, chips=chips,
+            flops_per_device=cal["flops_per_device"],
+            bytes_per_device=cal["bytes_per_device"],
+            wire_bytes_per_device=cal["wire_bytes_per_device"],
+            collectives=cal["collectives"],
+            model_flops=mf,
+            peak_memory_per_device=float(peak_mem),
+        )
+        cell.update(status="ok", compile_s=round(t_real, 1),
+                    total_s=round(t_all, 1), memory=mem,
+                    calibration=cal["points"], units=cal["units"],
+                    roofline=rl.as_dict(), params_total=n_total,
+                    params_active=n_active, hlo_bytes=hlo_bytes)
+        if verbose:
+            print(f"[ok] {cell['arch']} × {shape} × {mname}: "
+                  f"compile {t_real:.0f}s (+cal {t_all - t_real:.0f}s) "
+                  f"mem/dev={peak_mem/2**30:.2f}GiB "
+                  f"bottleneck={rl.bottleneck} roofline={rl.roofline_fraction:.2%} "
+                  f"useful={rl.useful_ratio:.2f}", flush=True)
+    except Exception as e:
+        cell.update(status="fail", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[FAIL] {cell['arch']} × {shape} × {mname}: "
+                  f"{type(e).__name__}: {e}", flush=True)
+    return cell
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> pathlib.Path:
+    mname = "2x16x16" if multi_pod else "16x16"
+    if os.environ.get("REPRO_MESH"):
+        mname = os.environ["REPRO_MESH"].replace(",", "x")
+    return OUT_DIR / f"{arch}__{shape}__{mname}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = list_configs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                p = cell_path(arch, shape, mp)
+                if p.exists() and not args.force:
+                    prev = json.loads(p.read_text())
+                    if prev.get("status") in ("ok", "skip"):
+                        print(f"[cached] {arch} × {shape} × {prev['mesh']}: "
+                              f"{prev['status']}", flush=True)
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skip"
+                        continue
+                cell = run_cell(arch, shape, mp)
+                p.write_text(json.dumps(cell, indent=1))
+                n_ok += cell["status"] == "ok"
+                n_fail += cell["status"] == "fail"
+                n_skip += cell["status"] == "skip"
+    print(f"\ndry-run summary: ok={n_ok} fail={n_fail} skip={n_skip}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,240 @@
+"""Roofline terms from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = Σ per-device wire bytes / ICI_bw
+
+``compiled.cost_analysis()`` gives per-partition FLOPs/bytes (the SPMD
+module is per-device).  Collective bytes are NOT in cost_analysis: we parse
+``compiled.as_text()`` — post-SPMD HLO where all-gather/all-reduce/…
+appear with per-device result shapes — and apply ring formulas with the
+replica-group size n:
+
+  all-gather        out × (n−1)/n          (out = gathered result)
+  reduce-scatter    out × (n−1)            (out = local shard)
+  all-reduce        2 × out × (n−1)/n
+  all-to-all        out × (n−1)/n
+  collective-permute out × 1
+
+MODEL_FLOPS = 6·N·D (train, dense) / 6·N_active·D (MoE); 2·N·D per decoded
+token.  The useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes
+remat and dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+from .mesh import HW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+# e.g.:  %ag = bf16[4,128]{1,0} all-gather(%p), replica_groups=...
+_LINE_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    per = _DTYPE_BYTES.get(dtype, 4)
+    if not dims:
+        return per
+    return per * int(np.prod([int(d) for d in dims.split(",") if d]))
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective type + op counts.
+
+    XLA:CPU *promotes* bf16 all-reduces to f32 (no bf16 arithmetic on CPU);
+    TPU reduces bf16 natively.  We detect promotion — an f32 all-reduce whose
+    operand is produced by a convert-fusion — and count 2 bytes/element
+    (verified semantically: JAX-level activation cotangents are bf16)."""
+    producers: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        ls = line.strip()
+        if ls.startswith("%") and "=" in ls:
+            producers[ls.split(" ", 1)[0].lstrip("%")] = ls
+    out = {c: {"wire_bytes": 0.0, "count": 0, "raw_bytes": 0,
+               "bf16_promoted": 0} for c in _COLL}
+    for line in lines:
+        m = _LINE_RE.search(line)
+        if m is None:
+            continue
+        dtype, dims, kind = m.groups()
+        if f" {kind}" not in line and f"{kind}(" not in line:
+            continue
+        nbytes = _shape_bytes(dtype, dims)
+        if kind == "all-reduce" and dtype == "f32":
+            ops = re.findall(r"all-reduce(?:-start)?\(([^)]*)\)", line)
+            if ops:
+                first = ops[0].split(",")[0].strip().lstrip("%")
+                src = producers.get(first, "")
+                if "convert" in first or "convert" in src.split("=")[0]:
+                    nbytes //= 2
+                    out[kind]["bf16_promoted"] += 1
+        # variadic collectives: count every result operand in the tuple
+        if "= (" in line.split(kind)[0]:
+            tuple_part = line.split("= (", 1)[1].split(")")[0]
+            nbytes = sum(
+                _shape_bytes(d, s)
+                for d, s in re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", tuple_part)
+            )
+        n = 1
+        g = _GROUPS_LIST_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g = _GROUPS_IOTA_RE.search(line)
+            if g:
+                n = int(g.group(2))
+        if n <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-gather":
+            wire = nbytes * (n - 1) / n
+        elif kind == "all-reduce":
+            wire = 2 * nbytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = nbytes * (n - 1)
+        elif kind == "all-to-all":
+            wire = nbytes * (n - 1) / n
+        else:
+            wire = nbytes
+        out[kind]["wire_bytes"] += wire
+        out[kind]["count"] += 1
+        out[kind]["raw_bytes"] += nbytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    collectives: dict
+    model_flops: float
+    peak_memory_per_device: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / HW["peak_flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / HW["ici_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs MFU bound implied by the dominant term."""
+        t_star = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_star == 0:
+            return 0.0
+        return (self.model_flops / self.chips / HW["peak_flops_bf16"]) / t_star
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(cfg, shape_info: dict, n_params: float, n_active: float) -> float:
+    """6·N·D for training; 2·N·D per token for decode; 2·N·D·S for prefill."""
+    B, S = shape_info["batch"], shape_info["seq"]
+    if shape_info["kind"] == "train":
+        return 6.0 * n_active * B * S
+    if shape_info["kind"] == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B * 1  # decode: one token per sequence
+
+
+def count_params(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from the config arithmetic."""
+    D, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    embed = V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "xlstm":
+        G = L // cfg.xlstm_group
+        n_m = cfg.xlstm_group - 1
+        per_m = 4 * D * H * hd + 2 * D * H + H * hd * D
+        per_s = 4 * (D * H * hd + H * hd * hd) + H * hd * D
+        total = embed + G * (n_m * per_m + per_s)
+        return float(total), float(total)
+    if cfg.family == "hybrid":
+        G = L // cfg.hybrid_group
+        n_m = cfg.hybrid_group - 1
+        d_in = cfg.ssm_expand * D
+        Hs = d_in // cfg.ssm_headdim
+        per_mamba = 2 * D * d_in + 2 * D * cfg.ssm_state + D * Hs + d_in * D
+        attn = D * (H + 2 * KV) * hd + H * hd * D
+        mlp = 3 * D * cfg.d_ff
+        total = embed + G * (n_m * per_mamba + attn + mlp)
+        return float(total), float(total)
+    if cfg.mla:
+        attn = (D * cfg.q_lora_rank + cfg.q_lora_rank * H * (hd + cfg.rope_head_dim)
+                + D * (cfg.kv_lora_rank + cfg.rope_head_dim)
+                + cfg.kv_lora_rank * H * (hd + cfg.v_head_dim) + H * cfg.v_head_dim * D)
+    else:
+        attn = D * (H + 2 * KV) * hd + H * hd * D
+    if cfg.num_experts:
+        per_expert = 3 * D * cfg.d_ff
+        shared = 3 * D * cfg.d_ff * cfg.num_shared_experts
+        router = D * cfg.num_experts
+        mlp_total = cfg.num_experts * per_expert + shared + router
+        mlp_active = cfg.num_experts_per_tok * per_expert + shared + router
+    else:
+        nmat = 3 if cfg.mlp == "swiglu" else 2
+        mlp_total = mlp_active = nmat * D * cfg.d_ff
+    enc = cfg.encoder_layers * (attn * 2 + mlp_total) if cfg.family == "encdec" else 0
+    xattn = attn if cfg.family == "encdec" else 0
+    total = embed + L * (attn + xattn + mlp_total) + enc
+    active = embed + L * (attn + xattn + mlp_active) + enc
+    return float(total), float(active)
+
+
+def save_report(path: str, rows: list[dict]):
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)

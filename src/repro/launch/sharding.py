@@ -1,0 +1,264 @@
+"""Sharding rules: logical placement for every param / batch / cache leaf.
+
+Axis roles
+  model ("tp")        — tensor parallel: attention heads, FFN hidden, expert
+                        dim (EP) or vocab rows; chosen per-leaf with
+                        divisibility guards (GQA kv=8 < tp=16 ⇒ replicate
+                        heads, shard head_dim instead where legal).
+  data  ("fsdp"/dp)   — batch, plus ZeRO-3 weight sharding when cfg.fsdp.
+  pod   (dp only)     — pure data parallelism across pods (DCN): batch and
+                        gradient all-reduce, never weight storage.
+
+Everything funnels through ``spec_for_param`` / ``batch_specs`` /
+``cache_specs`` so the dry-run, the launchers, and the tests agree on one
+source of truth.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .mesh import dp_axes, dp_size
+
+
+def _axsize(mesh, name) -> int:
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+def _div(dim: int, mesh, axis: str):
+    """axis if it divides dim, else None (replicate)."""
+    return axis if dim % max(_axsize(mesh, axis), 1) == 0 and _axsize(mesh, axis) > 1 else None
+
+
+def _dp(mesh, dim: int):
+    axes = dp_axes(mesh)
+    if not axes:
+        return None
+    if dim % dp_size(mesh) == 0:
+        return axes if len(axes) > 1 else axes[0]
+    # try data-only (e.g. batch 16 on a 2x16 dp grid)
+    if "data" in axes and dim % _axsize(mesh, "data") == 0:
+        return "data"
+    return None
+
+
+def activation_rules(cfg: ModelConfig, mesh, batch: int) -> dict:
+    """Logical-name → mesh-axes map for models/shardctx.constrain."""
+    return {
+        "batch": _dp(mesh, batch),
+        "vocab": _div(cfg.padded_vocab, mesh, "model"),
+        "expert": _div(cfg.num_experts, mesh, "model") if cfg.num_experts else None,
+        "tp": "model",
+        "fsdp": "data" if (cfg.fsdp and _axsize(mesh, "data") > 1) else None,
+    }
+
+
+# --------------------------------------------------------------------- params
+def _param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh) -> P:
+    """Spec for the *trailing* (per-layer) dims; leading scan dims handled by
+    the caller.  ``path`` is a '/'-joined key path."""
+    fsdp = "data" if (cfg.fsdp and _axsize(mesh, "data") > 1) else None
+    tp = "model"
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    def fs(dim_idx):
+        return fsdp if fsdp and shape[dim_idx] % _axsize(mesh, "data") == 0 else None
+
+    # embeddings / head
+    if name == "embed":
+        return P(_div(shape[0], mesh, tp), fs(1))
+    if name == "lm_head":
+        return P(fs(0), _div(shape[1], mesh, tp))
+
+    # MoE experts: (E, D, F) / (E, F, D) — EP over tp when E divides, else
+    # hidden-sharded; the d_model dim additionally ZeRO-shards over data when
+    # cfg.fsdp (models/moe.py all-gathers it inside shard_map, bf16).
+    if re.search(r"moe/(wg|wu|wd)$", path):
+        ep = _div(shape[0], mesh, tp)
+        if ep:
+            # ZeRO-shard the FFN (F) dim over data: the shard_map body either
+            # weight-gathers it (train/prefill) or keeps the slice and
+            # token-gathers instead (decode) — models/moe.py §Perf #8
+            if name in ("wg", "wu"):
+                return P(ep, None, fs(2))
+            return P(ep, fs(1), None)
+        if name in ("wg", "wu"):
+            return P(None, fs(1), _div(shape[2], mesh, tp))
+        return P(None, _div(shape[1], mesh, tp), fs(2))
+    if name == "router":
+        return P(fs(0), None)
+
+    # xlstm mLSTM: shard the value/output dim (state output axis)
+    if "/mlstm/" in path or "/slstm/" in path:
+        if name in ("wv", "wz"):
+            return P(fs(0), None, _div(shape[2], mesh, tp))
+        if name in ("wq", "wk"):
+            return P(fs(0), None, None)
+        if name == "wo":
+            return P(None, _div(shape[1], mesh, tp), fs(2))
+        if name == "out_norm":
+            return P(None, _div(shape[1], mesh, tp))
+        return P(*([None] * nd))
+
+    # mamba2: shard SSM heads
+    if "/mamba/" in path or "cell/" in path and name in (
+        "wz", "wx", "wB", "wC", "w_dt", "dt_bias", "A_log", "D_skip",
+        "conv_x", "conv_B", "conv_C", "out_norm",
+    ):
+        if name in ("wz", "wx"):
+            return P(fs(0), _div(shape[1], mesh, tp), None)
+        if name in ("wB", "wC"):
+            return P(fs(0), None)
+        if name == "w_dt":
+            return P(fs(0), _div(shape[1], mesh, tp))
+        if name in ("dt_bias", "A_log", "D_skip"):
+            return P(_div(shape[0], mesh, tp))
+        if name == "conv_x":
+            return P(None, _div(shape[1], mesh, tp), None)
+        if name in ("conv_B", "conv_C"):
+            return P(None, None)
+        if name == "out_norm":
+            return P(_div(shape[0], mesh, tp), None)
+
+    # attention
+    if name in ("wq", "wk", "wv"):          # (D, H, hd)
+        h_ax = _div(shape[1], mesh, tp)
+        hd_ax = _div(shape[2], mesh, tp) if h_ax is None else None
+        return P(fs(0), h_ax, hd_ax)
+    if name == "wo" and nd == 3:             # (H, hd, D)
+        h_ax = _div(shape[0], mesh, tp)
+        hd_ax = _div(shape[1], mesh, tp) if h_ax is None else None
+        return P(h_ax, hd_ax, fs(2))
+    if name in ("bq", "bk", "bv"):            # (H, hd)
+        return P(_div(shape[0], mesh, tp), None)
+    # MLA
+    if name in ("wq_a", "wkv_a"):             # (D, r)
+        return P(fs(0), None)
+    if name in ("wq_b", "wk_b", "wv_b"):      # (r, H, d)
+        return P(fs(0), _div(shape[1], mesh, tp), None)
+
+    # dense MLPs (incl. shared experts): (D, F) / (F, D)
+    if name in ("wg", "wu", "wi"):
+        return P(fs(0), _div(shape[1], mesh, tp))
+    if name == "wd":
+        return P(_div(shape[0], mesh, tp), fs(1))
+    if name in ("bi",):
+        return P(_div(shape[0], mesh, tp))
+    if name in ("bd",):
+        return P(None)
+
+    # norms, biases, gates — replicate
+    return P(*([None] * nd))
+
+
+def _leading_scan_dims(path: str, cfg: ModelConfig) -> int:
+    if "/mlstm/" in path or "/mamba/" in path:
+        return 2                      # (G, n_inner, ...)
+    if "/slstm/" in path:
+        return 1                      # (G, ...)
+    if "shared_attn/" in path:
+        return 0                      # weight-tied single block
+    if path.startswith(("stack/", "enc/")):
+        return 1                      # (L, ...)
+    return 0
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, mesh):
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+
+    def one(key_path, leaf):
+        path = _path_str(key_path)
+        lead = _leading_scan_dims(path, cfg)
+        trailing = tuple(leaf.shape[lead:])
+        spec = _param_spec(path, trailing, cfg, mesh)
+        return P(*([None] * lead + list(spec)))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_pspecs(cfg: ModelConfig, params_shape, mesh):
+    ps = param_pspecs(cfg, params_shape, mesh)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+# --------------------------------------------------------------------- batch
+def batch_specs(cfg: ModelConfig, batch_shapes: dict, mesh) -> dict:
+    out: dict[str, Any] = {}
+    for k, v in batch_shapes.items():
+        if k == "cache":
+            out[k] = cache_specs(cfg, v, mesh)
+            continue
+        if k == "pos":
+            out[k] = P()
+            continue
+        b = v.shape[0] if v.ndim else 1
+        dp = _dp(mesh, b)
+        if k in ("frames", "patches"):
+            out[k] = P(dp, None, None)
+        else:
+            out[k] = P(*([dp] + [None] * (v.ndim - 1)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, mesh):
+    """Decode caches: batch over dp, heads (or head_dim / latent dim) over tp."""
+
+    def one(key_path, leaf):
+        path = _path_str(key_path)
+        name = path.split("/")[-1]
+        nd = leaf.ndim
+        if name == "kpos":
+            return P(*([None] * nd))
+        if name in ("c_kv", "k_rope"):     # (L, B, S, r)
+            return P(None, _dp(mesh, leaf.shape[1]), None,
+                     _div(leaf.shape[3], mesh, "model"))
+        if name in ("k", "v") or "cross" in path:
+            # (L_or_G, B, S, KV, hd) or xattn precomputed (L, B, Se, KV, hd)
+            if nd == 5:
+                kv_ax = _div(leaf.shape[3], mesh, "model")
+                hd_ax = _div(leaf.shape[4], mesh, "model") if kv_ax is None else None
+                return P(None, _dp(mesh, leaf.shape[1]), None, kv_ax, hd_ax)
+        if "ssm" in path and nd == 6:       # (G, n_m, B, H, P, N)
+            return P(None, None, _dp(mesh, leaf.shape[2]),
+                     _div(leaf.shape[3], mesh, "model"), None, None)
+        if "conv" in path and nd == 5:      # (G, n_m, B, ks, C)
+            return P(None, None, _dp(mesh, leaf.shape[2]), None,
+                     _div(leaf.shape[4], mesh, "model"))
+        if "m/" in path or path.startswith("m"):
+            pass
+        # xlstm states: shard batch over dp; value dim over tp when present
+        if nd == 6:                          # mLSTM C (G, n_m, B, H, dv, dk)
+            return P(None, None, _dp(mesh, leaf.shape[2]),
+                     None, _div(leaf.shape[4], mesh, "model"), None)
+        if nd == 5:                          # mLSTM n (G, n_m, B, H, d)
+            return P(None, None, _dp(mesh, leaf.shape[2]), None, None)
+        if nd == 4:                          # sLSTM states (G, B, H, dh) / mLSTM m
+            return P(None, _dp(mesh, leaf.shape[1]), None, None)
+        if nd == 3:
+            return P(None, _dp(mesh, leaf.shape[1]), None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

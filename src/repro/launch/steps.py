@@ -1,0 +1,127 @@
+"""train_step / serve_step factories — the units the dry-run lowers and the
+launchers execute.
+
+The logical-axis rules context is entered *inside* the step so the
+activation sharding constraints bind during tracing under any jit/lowering.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import Model, build_model
+from ..models.shardctx import logical_axis_rules
+from ..optim import AdamWConfig, apply_updates, compress_grads, init_compression, init_opt_state
+from .sharding import activation_rules
+
+
+def _rules_ctx(cfg, mesh, batch_size):
+    if mesh is None:
+        return contextlib.nullcontext()
+    return logical_axis_rules(mesh, activation_rules(cfg, mesh, batch_size))
+
+
+def _effective_microbatches(cfg, mesh, B: int) -> int:
+    """Largest n ≤ cfg.microbatches with (B/n) still dividing the dp axes."""
+    n = max(1, cfg.microbatches)
+    if mesh is None:
+        return min(n, B) if B % min(n, B) == 0 else 1
+    from .mesh import dp_size
+    dp = dp_size(mesh)
+    while n > 1 and (B % n or (B // n) % dp):
+        n -= 1
+    return max(n, 1)
+
+
+def make_train_step(cfg: ModelConfig, mesh=None, opt_cfg: AdamWConfig | None = None):
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.opt_dtype)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        n = _effective_microbatches(cfg, mesh, B)
+        with _rules_ctx(cfg, mesh, B // n):
+            grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+            if n == 1:
+                (loss, metrics), grads = grad_fn(params, batch)
+            else:
+                # gradient accumulation: activation memory ÷ n, same math
+                micro = jax.tree.map(
+                    lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                    batch)
+
+                def body(acc, mb):
+                    (l, m), g = grad_fn(params, mb)
+                    g_acc = jax.tree.map(jnp.add, acc[0], g)
+                    return (g_acc, acc[1] + l, acc[2] + m["tokens"]), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (g_sum, l_sum, tok), _ = jax.lax.scan(
+                    body, (zeros, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / n, g_sum)
+                loss = l_sum / n
+                metrics = {"loss": loss, "tokens": tok}
+            if cfg.grad_compress:
+                grads, comp = compress_grads(grads, opt_state["comp"])
+            new_params, new_opt, om = apply_updates(
+                params, grads, opt_state, opt_cfg)
+            if cfg.grad_compress:
+                new_opt["comp"] = comp
+            metrics.update(om)
+            return new_params, new_opt, metrics
+
+    def init_state(key):
+        params = model.init(key)
+        opt = init_opt_state(params, opt_cfg)
+        if cfg.grad_compress:
+            opt["comp"] = init_compression(params)
+        return params, opt
+
+    return model, train_step, init_state, opt_cfg
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    """Inference prefill: forward + KV-cache population (no gradients).
+    Recurrent families lower the forward pass (their states are warmed by
+    the serving loop — DESIGN §7)."""
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        with _rules_ctx(cfg, mesh, batch["tokens"].shape[0]):
+            if cfg.family in ("xlstm", "hybrid"):
+                loss, metrics = model.loss_fn(params, batch)
+                return metrics["loss"]
+            logits, cache = model.prefill(params, batch)
+            return logits, cache
+
+    return model, prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    model = build_model(cfg)
+
+    def serve_step(params, batch):
+        with _rules_ctx(cfg, mesh, batch["token"].shape[0]):
+            logits, new_cache = model.decode_step(params, batch)
+            # greedy sample — serving loop feeds it back
+            next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_token, logits, new_cache
+
+    return model, serve_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh=None):
+    model = build_model(cfg)
+
+    def eval_step(params, batch):
+        with _rules_ctx(cfg, mesh, batch["tokens"].shape[0]):
+            loss, metrics = model.loss_fn(params, batch)
+            return metrics
+
+    return model, eval_step

@@ -1,0 +1,102 @@
+"""End-to-end training driver.
+
+Single-host execution (CPU smoke / examples) or mesh-sharded (pass --mesh).
+Wires together: config registry → model → AdamW → synthetic or
+Parsa-sharded data → TrainLoop (checkpoint/restart, failure injection) —
+the full framework path a real pod job takes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
+      --reduce --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..data import SyntheticLMData
+from ..optim import AdamWConfig
+from ..runtime import FaultConfig, TrainLoop
+from .steps import make_train_step
+
+
+def build(cfg, mesh=None, lr=3e-4):
+    opt_cfg = AdamWConfig(lr=lr, moment_dtype=cfg.opt_dtype)
+    model, train_step, init_state, _ = make_train_step(cfg, mesh, opt_cfg)
+    return model, jax.jit(train_step, donate_argnums=(0, 1)), init_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduce", action="store_true",
+                    help="reduced config of the same family (CPU-runnable)")
+    ap.add_argument("--width", type=int, default=None,
+                    help="override d_model for --reduce (e.g. ~100M model)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        over = {}
+        if args.width:
+            over.update(d_model=args.width, head_dim=args.width // 4,
+                        d_ff=0 if cfg.d_ff == 0 else args.width * 4,
+                        vocab_size=8192)
+        if args.layers:
+            over["num_layers"] = args.layers
+        cfg = cfg.reduced(**over)
+    model, train_step, init_state = build(cfg, lr=args.lr)
+
+    data = SyntheticLMData(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+    def batches():
+        for t in range(start, args.steps):
+            b = data.batch_at(t)
+            b = {k: jax.numpy.asarray(v) for k, v in b.items()}
+            if cfg.family == "encdec":
+                b["frames"] = jax.numpy.zeros(
+                    (args.batch, cfg.encoder_seq, cfg.d_model), jax.numpy.float32)
+            if cfg.family == "vlm":
+                b["patches"] = jax.numpy.zeros(
+                    (args.batch, cfg.num_patches, cfg.d_model), jax.numpy.float32)
+            yield b
+
+    fault = FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                        fail_at_step=args.fail_at)
+    loop = TrainLoop(train_step, fault)
+    if args.resume:
+        start, params, opt = loop.resume_or(
+            lambda: init_state(jax.random.PRNGKey(0)))
+        print(f"resumed at step {start}")
+    else:
+        start = 0
+        params, opt = init_state(jax.random.PRNGKey(0))
+    n = model.param_count(params)
+    print(f"arch={cfg.name} params={n/1e6:.1f}M steps={start}->{args.steps}")
+    t0 = time.time()
+    params, opt, hist = loop.run(params, opt, batches(), start_step=start,
+                                 log_every=args.log_every)
+    dt = time.time() - t0
+    steps_done = args.steps - start
+    tok = steps_done * args.batch * args.seq
+    print(f"done: {steps_done} steps, {dt:.1f}s, {tok/max(dt,1e-9):.0f} tok/s")
+    if hist:
+        print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    return hist
+
+
+if __name__ == "__main__":
+    main()

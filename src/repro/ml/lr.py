@@ -1,0 +1,96 @@
+r"""ℓ1-regularized logistic regression on sparse data (paper §5.5).
+
+minimize  Σ_i log(1 + exp(-y_i x_i·w)) + λ‖w‖₁
+
+Data rows are CSR; the JAX compute path uses gather + segment_sum so a
+worker's step is one jit over fixed (padded) nnz — the same shape every
+iteration, matching a real worker's steady state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bipartite import BipartiteGraph
+
+__all__ = ["SparseBatch", "lr_objective", "lr_grad", "make_problem"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["row_ids", "col_ids", "values", "labels"],
+    meta_fields=["num_rows", "num_features"],
+)
+@dataclasses.dataclass
+class SparseBatch:
+    """Padded CSR batch: row_ids aligns each nnz with its row."""
+
+    num_rows: int
+    num_features: int
+    row_ids: jax.Array   # (nnz_pad,) int32
+    col_ids: jax.Array   # (nnz_pad,) int32
+    values: jax.Array    # (nnz_pad,) f32  (0 on padding)
+    labels: jax.Array    # (num_rows,) f32 ∈ {-1, +1}
+
+    @staticmethod
+    def from_graph(
+        graph: BipartiteGraph, rows: np.ndarray, labels: np.ndarray, pad_to: int | None = None
+    ) -> "SparseBatch":
+        lens = (graph.u_indptr[rows + 1] - graph.u_indptr[rows]).astype(np.int64)
+        nnz = int(lens.sum())
+        pad = pad_to if pad_to is not None else nnz
+        row_ids = np.zeros(pad, np.int32)
+        col_ids = np.zeros(pad, np.int32)
+        vals = np.zeros(pad, np.float32)
+        off = 0
+        for local_r, u in enumerate(rows):
+            nb = graph.neighbors(int(u))
+            row_ids[off : off + len(nb)] = local_r
+            col_ids[off : off + len(nb)] = nb
+            vals[off : off + len(nb)] = 1.0
+            off += len(nb)
+        return SparseBatch(
+            len(rows), graph.num_v,
+            jnp.asarray(row_ids), jnp.asarray(col_ids), jnp.asarray(vals),
+            jnp.asarray(labels[rows].astype(np.float32)),
+        )
+
+
+def _margins(batch: SparseBatch, w: jax.Array) -> jax.Array:
+    xw = jax.ops.segment_sum(
+        batch.values * w[batch.col_ids], batch.row_ids, num_segments=batch.num_rows
+    )
+    return batch.labels * xw
+
+
+def lr_objective(batch: SparseBatch, w: jax.Array, lam: float) -> jax.Array:
+    m = _margins(batch, w)
+    # log(1 + e^{-m}) computed stably
+    loss = jnp.sum(jnp.logaddexp(0.0, -m))
+    return loss + lam * jnp.sum(jnp.abs(w))
+
+
+def lr_grad(batch: SparseBatch, w: jax.Array) -> jax.Array:
+    """∇ of the smooth part: Σ -y_i σ(-y_i x_i·w) x_i, via scatter-add."""
+    m = _margins(batch, w)
+    coef = -batch.labels * jax.nn.sigmoid(-m)  # (rows,)
+    contrib = batch.values * coef[batch.row_ids]
+    return jax.ops.segment_sum(contrib, batch.col_ids, num_segments=batch.num_features)
+
+
+def make_problem(graph: BipartiteGraph, seed: int = 0, noise: float = 0.1):
+    """Plant a sparse ground-truth w* and emit consistent ±1 labels."""
+    rng = np.random.default_rng(seed)
+    w_star = np.zeros(graph.num_v, np.float32)
+    support = rng.choice(graph.num_v, size=max(1, graph.num_v // 20), replace=False)
+    w_star[support] = rng.normal(0, 1, size=support.size).astype(np.float32)
+    margins = np.zeros(graph.num_u, np.float32)
+    for u in range(graph.num_u):
+        margins[u] = w_star[graph.neighbors(u)].sum()
+    flip = rng.random(graph.num_u) < noise
+    labels = np.where(np.sign(margins + 1e-6) * (1 - 2 * flip) >= 0, 1.0, -1.0)
+    return w_star, labels.astype(np.float32)

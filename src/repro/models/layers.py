@@ -1,0 +1,368 @@
+"""Shared transformer layers: norms, rotary, attention (GQA/MLA/SWA), MLPs.
+
+Pure-JAX functional style: params are plain dicts; init_* functions build
+them; apply functions are jit/scan/shard_map friendly.  Dtype policy: params
+live in ``param_dtype`` (fp32 master), compute casts to ``dtype`` (bf16).
+
+Attention impls:
+  * ``naive``   — full (Sq, Skv) score matrix (smoke tests).
+  * ``chunked`` — lax.map over query chunks; bounds the live score tensor to
+    (B, cq, H, Skv).  This is the XLA path the dry-run lowers (a Pallas
+    flash kernel cannot compile on the CPU backend); the TPU deployment
+    path is kernels/flash_attention, numerically validated against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- init
+def _dense_init(key, shape, scale_axis=0, dtype=jnp.float32):
+    fan_in = shape[scale_axis] if isinstance(scale_axis, int) else int(
+        np.prod([shape[a] for a in scale_axis])
+    )
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg, dim=None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm" and cfg.use_bias:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    """Norm with f32 *statistics* but elementwise math in x.dtype: keeps the
+    activation cotangents bf16 end-to-end, which halves the wire bytes of
+    every tensor-parallel all-reduce they cross (§Perf #7); statistics stay
+    f32 for stability (standard bf16-layernorm practice)."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        out = x * inv * p["scale"].astype(x.dtype)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        out = (x - mu.astype(x.dtype)) * inv * p["scale"].astype(x.dtype)
+        if "bias" in p:
+            out = out + p["bias"].astype(x.dtype)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm (qwen3): normalize the trailing head_dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32)[..., None, :] * freqs  # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int):
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / (10000 ** (dim / d_model))
+    out = np.zeros((seq, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(key, cfg):
+    ks = jax.random.split(key, 8)
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pd = jnp.float32
+    p = {
+        "wq": _dense_init(ks[0], (D, H, hd), 0, pd),
+        "wk": _dense_init(ks[1], (D, KV, hd), 0, pd),
+        "wv": _dense_init(ks[2], (D, KV, hd), 0, pd),
+        "wo": _dense_init(ks[3], (H, hd, D), (0, 1), pd),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H, hd), pd)
+        p["bk"] = jnp.zeros((KV, hd), pd)
+        p["bv"] = jnp.zeros((KV, hd), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pd)
+        p["k_norm"] = jnp.ones((hd,), pd)
+    return p
+
+
+def _scores_mask(q_pos, k_pos, window: Optional[int], causal: bool):
+    """(..., Sq, Skv) additive mask from position vectors."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """q (B,Sq,H,dh) k/v (B,Skv,KV,dh) → (B,Sq,H,dh); GQA via head grouping."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(dh) + mask[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])  # v dim may differ (MLA)
+
+
+def attention(
+    q, k, v, *, q_positions, k_positions, causal=True,
+    window: Optional[int] = None, impl="chunked", chunk=1024, dtype=jnp.bfloat16,
+    context_parallel: bool = False,
+):
+    """Masked GQA attention; chunked over queries when impl == 'chunked'.
+
+    context_parallel: shard the *query sequence* over the tp axis instead of
+    heads — used when the head count does not divide tp (e.g. qwen3's 40
+    heads on a 16-wide model axis), where head_dim-sharded attention would
+    otherwise force an all-reduce of the full (Sq × Skv) score tensor.
+    k/v replicate across tp (cheap for GQA); each shard computes its query
+    slice; the output reshards back.  DESIGN §5."""
+    from .shardctx import constrain as _c
+
+    if context_parallel:
+        q = _c(q, "batch", "tp", None, None)
+        k = _c(k, "batch", None, None, None)
+        v = _c(v, "batch", None, None, None)
+    B, Sq = q.shape[:2]
+    if impl == "naive" or Sq <= chunk:
+        mask = _scores_mask(q_positions, k_positions, window, causal)
+        return _sdpa(q, k, v, mask, dtype)
+    while Sq % chunk:  # non-multiple sequence (e.g. whisper's 1500 frames)
+        chunk //= 2
+        if chunk < 64:
+            mask = _scores_mask(q_positions, k_positions, window, causal)
+            return _sdpa(q, k, v, mask, dtype)
+    nq = Sq // chunk
+
+    # remat per chunk: the backward pass recomputes each chunk's scores
+    # instead of saving (B, cq, H, Skv) probs for every chunk as lax.map
+    # residuals — the flash-attention memory contract on the XLA path.
+    @jax.checkpoint
+    def one_chunk(args):
+        qc, qp = args
+        if context_parallel:
+            # constraints don't propagate into the map body — re-pin the
+            # query chunk sequence-sharded so the score contraction needs
+            # no tp reduce (§Perf #6)
+            qc = _c(qc, "batch", "tp", None, None)
+        mask = _scores_mask(qp, k_positions, window, causal)
+        out = _sdpa(qc, k, v, mask, dtype)
+        if context_parallel:
+            out = _c(out, "batch", "tp", None, None)
+        return out
+
+    qs = q.reshape(B, nq, chunk, *q.shape[2:]).swapaxes(0, 1)
+    qp = q_positions.reshape(B, nq, chunk).swapaxes(0, 1)
+    out = jax.lax.map(one_chunk, (qs, qp))  # (nq, B, chunk, H, dv)
+    return out.swapaxes(0, 1).reshape(B, Sq, *out.shape[-2:])
+
+
+def attention_block(p, x, cfg, positions, *, kv_cache=None, cache_len=None,
+                    cross_kv=None, causal=True, dtype=jnp.bfloat16):
+    """Full attention sub-block: qkv proj → rope → (cache) → sdpa → out proj.
+
+    kv_cache: optional dict {"k","v"} (B, Smax, KV, dh) + write at cache_len.
+    cross_kv: optional precomputed (k, v) for cross-attention (enc-dec).
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xq = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    if "bq" in p:
+        xq = xq + p["bq"].astype(dtype)
+    if cross_kv is None:
+        xk = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+        xv = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+        if "bk" in p:
+            xk = xk + p["bk"].astype(dtype)
+            xv = xv + p["bv"].astype(dtype)
+    else:
+        xk, xv = cross_kv
+    if cfg.qk_norm:
+        xq = rms_head_norm(p["q_norm"], xq)
+        if cross_kv is None:
+            xk = rms_head_norm(p["k_norm"], xk)
+    if cfg.rope_theta and cross_kv is None:
+        xq = apply_rope(xq, positions, cfg.rope_theta)
+        xk = apply_rope(xk, positions, cfg.rope_theta)
+    new_cache = None
+    if kv_cache is not None and cross_kv is None:
+        if "kpos" in kv_cache:
+            # SWA ring buffer (long-context decode): slot = pos mod window
+            Smax = kv_cache["k"].shape[1]
+            slot = jnp.mod(cache_len, Smax)
+            k_all = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], xk.astype(kv_cache["k"].dtype), slot, axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], xv.astype(kv_cache["v"].dtype), slot, axis=1)
+            kpos = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["kpos"], positions[0].astype(kv_cache["kpos"].dtype), slot, axis=0)
+            new_cache = {"k": k_all, "v": v_all, "kpos": kpos}
+            k_positions = jnp.broadcast_to(kpos[None], (B, Smax))
+        else:
+            k_all = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], xk.astype(kv_cache["k"].dtype), cache_len, axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], xv.astype(kv_cache["v"].dtype), cache_len, axis=1)
+            new_cache = {"k": k_all, "v": v_all}
+            Smax = k_all.shape[1]
+            k_positions = jnp.broadcast_to(jnp.arange(Smax)[None], (B, Smax))
+            # mask out unwritten cache slots by pushing their positions past q
+            k_positions = jnp.where(k_positions < cache_len + S, k_positions, 2**30)
+        xk, xv = k_all.astype(dtype), v_all.astype(dtype)
+    elif cross_kv is not None:
+        Skv = xk.shape[1]
+        k_positions = jnp.broadcast_to(jnp.arange(Skv)[None], (B, Skv))
+        causal = False
+    else:
+        k_positions = positions
+    from .shardctx import axis_size
+    tp = axis_size("tp")
+    ctx_par = (tp > 1 and cfg.num_heads % tp != 0 and xq.shape[1] % tp == 0
+               and cfg.attn_impl == "chunked")
+    out = attention(
+        xq, xk, xv, q_positions=positions, k_positions=k_positions,
+        causal=causal, window=cfg.swa_window, impl=cfg.attn_impl,
+        chunk=cfg.attn_chunk, dtype=dtype, context_parallel=ctx_par,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return out, new_cache
+
+
+# ----------------------------------------------------------------- MLA
+def init_mla(key, cfg):
+    ks = jax.random.split(key, 10)
+    D, H = cfg.d_model, cfg.num_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    pd = jnp.float32
+    return {
+        "wq_a": _dense_init(ks[0], (D, r_q), 0, pd),
+        "q_a_norm": jnp.ones((r_q,), pd),
+        "wq_b": _dense_init(ks[1], (r_q, H, dn + dr), 0, pd),
+        "wkv_a": _dense_init(ks[2], (D, r_kv + dr), 0, pd),
+        "kv_a_norm": jnp.ones((r_kv,), pd),
+        "wk_b": _dense_init(ks[3], (r_kv, H, dn), 0, pd),
+        "wv_b": _dense_init(ks[4], (r_kv, H, dv), 0, pd),
+        "wo": _dense_init(ks[5], (H, dv, D), (0, 1), pd),
+    }
+
+
+def mla_block(p, x, cfg, positions, *, cache=None, cache_len=None, dtype=jnp.bfloat16):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Cache holds the compressed latent c_kv (B, S, r_kv) + rope key k_r
+    (B, S, dr) — the MLA memory win.  Decode uses the absorbed formulation
+    (scores via W_uk-projected queries against the latent); prefill
+    reconstructs per-head k/v (flash-friendly on TPU).
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    r_kv, dr, dn, dv = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.head_dim, cfg.v_head_dim
+    # --- queries (low-rank)
+    q_lat = apply_norm({"scale": p["q_a_norm"]}, jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dtype)), "rmsnorm")
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"].astype(dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # --- latent kv
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dtype))
+    c_kv, k_r = kv_a[..., :r_kv], kv_a[..., r_kv:]
+    c_kv = apply_norm({"scale": p["kv_a_norm"]}, c_kv, "rmsnorm")
+    k_r = apply_rope(k_r[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    new_cache = None
+    if cache is not None:
+        c_all = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_len, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_r.astype(cache["k_rope"].dtype), cache_len, axis=1)
+        new_cache = {"c_kv": c_all, "k_rope": kr_all}
+        c_kv, k_r = c_all.astype(dtype), kr_all.astype(dtype)
+        Skv = c_kv.shape[1]
+        k_pos = jnp.arange(Skv)[None]
+        valid = (k_pos < cache_len + S)
+        mask = jnp.where(valid[:, None, :] & (k_pos[:, None, :] <= positions[:, :, None]), 0.0, NEG_INF)
+        # absorbed decode: score = (q_nope · W_uk c) + (q_rope · k_r)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(dtype))
+        scores = jnp.einsum("bshr,btr->bhst", q_abs, c_kv).astype(jnp.float32)
+        scores = scores + jnp.einsum("bshk,btk->bhst", q_rope, k_r).astype(jnp.float32)
+        scores = scores / np.sqrt(dn + dr) + mask[:, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, c_kv)
+        out = jnp.einsum("bshr,rhv->bshv", ctx, p["wv_b"].astype(dtype))
+    else:
+        # prefill/train: reconstruct per-head k, v (heads sharded over model)
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(dtype))
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, p["wv_b"].astype(dtype))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_r[:, :, None, :], (B, S, H, dr))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention(
+            qf, k, v, q_positions=positions, k_positions=positions,
+            causal=True, impl=cfg.attn_impl, chunk=cfg.attn_chunk, dtype=dtype,
+        )
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dtype))
+    return out, new_cache
+
+
+# ----------------------------------------------------------------- MLPs
+def init_mlp(key, cfg, d_ff=None):
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    pd = jnp.float32
+    if cfg.mlp == "swiglu":
+        return {
+            "wg": _dense_init(ks[0], (D, F), 0, pd),
+            "wu": _dense_init(ks[1], (D, F), 0, pd),
+            "wd": _dense_init(ks[2], (F, D), 0, pd),
+        }
+    p = {"wi": _dense_init(ks[0], (D, F), 0, pd), "wd": _dense_init(ks[1], (F, D), 0, pd)}
+    if cfg.use_bias:
+        p["bi"] = jnp.zeros((F,), pd)
+        p["bd"] = jnp.zeros((D,), pd)
+    return p
+
+
+def apply_mlp(p, x, kind: str, dtype=jnp.bfloat16):
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+        if "bi" in p:
+            h = h + p["bi"].astype(dtype)
+        if kind == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:  # gelu
+            h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(dtype))
+    if "bd" in p:
+        out = out + p["bd"].astype(dtype)
+    return out

@@ -1,0 +1,296 @@
+"""Model facade: build_model(cfg) → init / loss_fn / prefill / decode_step,
+plus input_specs() for the dry-run (ShapeDtypeStruct stand-ins, zero alloc).
+
+Batch formats
+  train   : {"tokens": (B,S) i32, "labels": (B,S) i32}
+            (+ "frames" (B,Se,D) for encdec, "patches" (B,P,D) for vlm)
+  decode  : {"token": (B,1) i32, "pos": () i32, "cache": pytree}
+            (+ "frames"/"patches" folded into the cache at prefill time)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import layers as LL
+from . import transformer as TR
+from .shardctx import constrain
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        D, V = cfg.d_model, cfg.padded_vocab
+        params: dict[str, Any] = {
+            "embed": (jax.random.normal(ks[0], (V, D)) * 0.02).astype(jnp.float32),
+            "final_norm": LL.init_norm(cfg),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(ks[1], (D, V)) * 0.02 / np.sqrt(D)).astype(jnp.float32)
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            params["stack"] = TR.init_dense_stack(ks[2], cfg)
+        elif fam == "encdec":
+            params["enc"] = TR.init_dense_stack(ks[2], cfg, n_layers=cfg.encoder_layers)
+            params["enc_norm"] = LL.init_norm(cfg)
+            params["stack"] = TR.init_dense_stack(ks[3], cfg, cross=True)
+        elif fam == "xlstm":
+            params["stack"] = TR.init_xlstm_stack(ks[2], cfg)
+        elif fam == "hybrid":
+            params["stack"] = TR.init_hybrid_stack(ks[2], cfg)
+        else:
+            raise ValueError(fam)
+        return params
+
+    def param_count(self, params) -> int:
+        return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+    # ------------------------------------------------------------- helpers
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+        return constrain(x, "batch", None, None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        from .shardctx import bf16_grad_barrier
+        x = LL.apply_norm(params["final_norm"], x, cfg.norm)
+        x = bf16_grad_barrier(x)  # the f32 dlogits dx re-types here (§Perf #7)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(_dt(cfg)))
+        return constrain(logits, "batch", None, "vocab")
+
+    def _encode(self, params, frames):
+        """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+        cfg = self.cfg
+        B, Se, D = frames.shape
+        x = frames.astype(_dt(cfg)) + LL.sinusoidal_positions(Se, D).astype(_dt(cfg))
+        pos = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+        x, _, _ = TR.apply_dense_stack(params["enc"], x, cfg, pos, causal=False)
+        x = LL.apply_norm(params["enc_norm"], x, cfg.norm)
+        return x
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-layer cross-attention k/v from encoder output."""
+        cfg = self.cfg
+        dt = _dt(cfg)
+
+        def one(pl_):
+            p = pl_["xattn"]
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+            if "bk" in p:
+                k, v = k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+            return (k, v)
+
+        return jax.lax.map(one, params["stack"])
+
+    def _backbone(self, params, x, positions, *, caches=None, cache_len=None,
+                  cross_kv=None):
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            return TR.apply_dense_stack(params["stack"], x, cfg, positions,
+                                        caches=caches, cache_len=cache_len)
+        if fam == "encdec":
+            return TR.apply_dense_stack(params["stack"], x, cfg, positions,
+                                        caches=caches, cache_len=cache_len,
+                                        cross_kv=cross_kv)
+        if fam == "xlstm":
+            x, st = TR.apply_xlstm_stack(params["stack"], x, cfg, states=caches)
+            return x, st, jnp.zeros((), jnp.float32)
+        if fam == "hybrid":
+            x, st = TR.apply_hybrid_stack(params["stack"], x, cfg, positions,
+                                          states=caches, cache_len=cache_len)
+            return x, st, jnp.zeros((), jnp.float32)
+        raise ValueError(fam)
+
+    # ------------------------------------------------------------- train
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        cross_kv = None
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+            cross_kv = self._cross_kv(params, enc_out)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(_dt(cfg))
+            x = jnp.concatenate([patches, x], axis=1)
+            P = patches.shape[1]
+            S = S + P
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            labels = jnp.concatenate(
+                [jnp.full((B, P), -1, labels.dtype), labels], axis=1)
+        if cfg.family == "encdec":
+            x = x + LL.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+        x, _, aux = self._backbone(params, x, positions, cross_kv=cross_kv)
+        logits = self._logits(params, x)
+        mask = (labels >= 0).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), jnp.maximum(labels, 0)[..., None], axis=-1
+        )[..., 0]
+        nll = (logz - gold) * mask
+        loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+        if cfg.num_experts:
+            loss = loss + 0.01 * aux / max(cfg.num_layers, 1)
+        return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+    # ------------------------------------------------------------- serve
+    def init_cache(self, batch: int, cache_seq: int, ring: bool = False):
+        cfg = self.cfg
+        dt = _dt(cfg)
+        if cfg.family in ("dense", "moe", "vlm"):
+            c = TR.init_kv_caches(cfg, batch, cache_seq, dtype=dt)
+            if ring and not cfg.mla:
+                L = cfg.num_layers
+                c["kpos"] = jnp.full((L, cache_seq), -(2**30), jnp.int32)
+            return c
+        if cfg.family == "encdec":
+            return {
+                "self": TR.init_kv_caches(cfg, batch, cache_seq, dtype=dt),
+                "cross": None,  # filled by prefill
+            }
+        if cfg.family == "xlstm":
+            return TR.init_xlstm_states(cfg, batch)
+        if cfg.family == "hybrid":
+            return TR.init_hybrid_states(cfg, batch, cache_seq, dtype=dt)
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, batch):
+        """One token against a populated cache. batch: token (B,1), pos (),
+        cache pytree (+ 'cross' kv for encdec)."""
+        cfg = self.cfg
+        token, pos, cache = batch["token"], batch["pos"], batch["cache"]
+        B = token.shape[0]
+        x = self._embed(params, token)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        if cfg.family == "encdec":
+            x = x + jax.lax.dynamic_slice_in_dim(
+                LL.sinusoidal_positions(cache["self"]["k"].shape[2], cfg.d_model),
+                pos, 1, axis=0).astype(x.dtype)[None]
+            caches, cross_kv = cache["self"], cache["cross"]
+            ring_caches = dict(caches)
+            x, new_caches, _ = self._backbone(params, x, positions,
+                                              caches=ring_caches, cache_len=pos,
+                                              cross_kv=cross_kv)
+            new_cache = {"self": new_caches, "cross": cross_kv}
+        else:
+            per_layer = cache
+            if cfg.family in ("dense", "moe", "vlm") and "kpos" in cache:
+                per_layer = cache  # scan consumes the stacked kpos too
+            x, new_caches, _ = self._backbone(params, x, positions,
+                                              caches=per_layer, cache_len=pos)
+            new_cache = new_caches
+        logits = self._logits(params, x)
+        if cfg.padded_vocab != cfg.vocab_size:
+            # never sample a padding row
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask[None, None], -1e30, logits)
+        return logits[:, 0], new_cache
+
+    def prefill(self, params, batch):
+        """Populate a cache from a full prompt (also used by serve tests)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache_seq = batch.get("cache_seq", S)
+        x = self._embed(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+            cross_kv = self._cross_kv(params, enc_out)
+            x = x + LL.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+            caches = TR.init_kv_caches(cfg, B, cache_seq, dtype=_dt(cfg))
+            x, new_caches, _ = self._backbone(params, x, positions,
+                                              caches=caches, cache_len=0,
+                                              cross_kv=cross_kv)
+            cache = {"self": new_caches, "cross": cross_kv}
+        elif cfg.family in ("xlstm", "hybrid"):
+            # Recurrent families: the parallel train path does not thread
+            # final states out; the serving driver (launch/serve.py) warms
+            # caches by stepping decode_step over the prompt instead.
+            raise NotImplementedError(
+                "prefill for recurrent families goes through launch/serve.py")
+        else:
+            caches = self.init_cache(B, cache_seq)
+            x, cache, _ = self._backbone(params, x, positions, caches=caches,
+                                         cache_len=0)
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------- input specs
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """Dry-run skip rules (DESIGN §7)."""
+    info = SHAPES[shape]
+    if shape == "long_500k":
+        if cfg.family in ("xlstm", "hybrid"):
+            return True, ""
+        if cfg.swa_window:
+            return True, ""
+        return False, "full attention is quadratic/unbounded-KV at 500k (skip per assignment)"
+    if cfg.family == "encdec" and info["kind"] == "prefill" and info["seq"] > 8192:
+        return True, ""  # decoder prefill is generic; allowed
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, dp_devices: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    sd = jax.ShapeDtypeStruct
+    if info["kind"] in ("train", "prefill"):
+        batch = {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), f)
+        if cfg.family == "vlm":
+            batch["patches"] = sd((B, cfg.num_patches, cfg.d_model), f)
+        return batch
+    # decode: one token against a seq_len cache
+    model = build_model(cfg)
+    ring = bool(cfg.swa_window) and shape == "long_500k"
+    cache_seq = min(S, cfg.swa_window) if ring else S
+    cache = jax.eval_shape(lambda: model.init_cache(B, cache_seq, ring=ring))
+    if cfg.family == "encdec":
+        kv = jax.eval_shape(
+            lambda: TR.init_kv_caches(cfg, B, cfg.encoder_seq, dtype=f))
+        cache = dict(cache)
+        cache["cross"] = (kv["k"], kv["v"])
+    return {
+        "token": sd((B, 1), i32),
+        "pos": sd((), i32),
+        "cache": cache,
+    }

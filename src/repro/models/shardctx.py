@@ -1,0 +1,100 @@
+"""Logical-axis sharding context for model code.
+
+Model layers annotate activations with *logical* axes via
+``constrain(x, "batch", None, "tp")``.  When a mesh context is active
+(launch/sharding.py activates one inside jit traces for the dry-run and the
+real launchers), the logical names resolve to mesh axes and become
+``with_sharding_constraint``; with no context (unit tests, single-CPU smoke
+runs) it is a no-op.  This keeps models mesh-agnostic and import-cycle-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh, rules: dict[str, object]):
+    """rules: logical name → mesh axis (str | tuple | None)."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def resolve(logical_axes: tuple) -> P | None:
+    ctx = current_rules()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    out = []
+    for ax in logical_axes:
+        if ax is None:
+            out.append(None)
+        else:
+            out.append(rules.get(ax))
+    return P(*out)
+
+
+def axis_size(logical: str) -> int:
+    """Mesh extent of a logical axis (1 when no context / unmapped)."""
+    ctx = current_rules()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    ax = rules.get(logical)
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return size
+
+
+def constrain(x, *logical_axes):
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = resolve(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@jax.custom_vjp
+def _bgb16(x):
+    return x
+
+
+def _bgb_fwd(x):
+    return x, None
+
+
+def _bgb_bwd(_, g):
+    import jax.numpy as jnp
+    return (g.astype(jnp.bfloat16),)
+
+
+_bgb16.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+def bf16_grad_barrier(x):
+    """Identity that *retypes* the cotangent to bf16 (the loss head emits an
+    f32 dx that otherwise stays f32 through every layer's backward — halving
+    the wire bytes of all backward activation all-reduces; §Perf #7).
+    Applied only to bf16 activations (fp32 smoke configs pass through)."""
+    import jax.numpy as jnp
+    if x.dtype == jnp.bfloat16:
+        return _bgb16(x)
+    return x

@@ -1,0 +1,173 @@
+"""Mamba2 (SSD — state-space duality) block, chunkwise-parallel training path
+and O(1)-state recurrent decode path (zamba2 backbone).
+
+Head-structured parameters so TP shards the SSM heads over the ``tp``
+logical axis (80 heads / 16 = 5 per device for zamba2); B/C are per-group
+(n_groups=1) and replicated.  The chunked algorithm is the matmul
+formulation from the Mamba2 paper (listing 1): intra-chunk quadratic term +
+inter-chunk state recurrence — MXU-friendly, O(L·Q) memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, apply_norm
+from .shardctx import constrain
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_headdim
+    return d_inner, heads, cfg.ssm_headdim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg):
+    ks = jax.random.split(key, 10)
+    D = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    pd = jnp.float32
+    kconv = cfg.ssm_conv
+    return {
+        "wz": _dense_init(ks[0], (D, H, P), 0, pd),
+        "wx": _dense_init(ks[1], (D, H, P), 0, pd),
+        "wB": _dense_init(ks[2], (D, N), 0, pd),
+        "wC": _dense_init(ks[3], (D, N), 0, pd),
+        "w_dt": _dense_init(ks[4], (D, H), 0, pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "A_log": jnp.zeros((H,), pd),
+        "D_skip": jnp.ones((H,), pd),
+        "conv_x": _dense_init(ks[5], (kconv, H, P), 0, pd),
+        "conv_B": _dense_init(ks[6], (kconv, N), 0, pd),
+        "conv_C": _dense_init(ks[7], (kconv, N), 0, pd),
+        "out_norm": jnp.ones((H, P), pd),
+        "wo": _dense_init(ks[8], (H, P, D), (0, 1), pd),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along axis 1. x (B, L, C), w (ks, C)."""
+    ks = w.shape[0]
+    xp = jnp.pad(x, [(0, 0), (ks - 1, 0), (0, 0)])
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(ks))
+    return out
+
+
+def _segsum(x):
+    """x (..., L) → (..., L, L): Σ_{j<m≤i} x_m below diag, -inf above."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, log_a, B_, C_, chunk: int):
+    """SSD scan. x (B,L,H,P), log_a (B,L,H) ≤ 0, B_/C_ (B,L,N) (group-shared).
+
+    Returns y (B,L,H,P) and final state (B,H,P,N).  x must already include
+    the dt scaling (x ← dt·x).
+    """
+    Bsz, L, H, P = x.shape
+    N = B_.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    ac = log_a.reshape(Bsz, nc, chunk, H).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    Bc = B_.reshape(Bsz, nc, chunk, N)
+    Cc = C_.reshape(Bsz, nc, chunk, N)
+
+    A_cum = jnp.cumsum(ac, axis=-1)                                # (B,H,nc,Q)
+    Lmat = jnp.exp(_segsum(ac))                                    # (B,H,nc,Q,Q)
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)                 # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp",
+                        scores, Lmat.astype(scores.dtype), xc)
+    # chunk-final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)                # (B,H,nc,Q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bc, decay_states.astype(Bc.dtype), xc)     # (B,nc,H,P,N)
+    # inter-chunk recurrence
+    chunk_decay = A_cum[..., -1]                                   # (B,H,nc)
+    padded = jnp.pad(chunk_decay, [(0, 0), (0, 0), (1, 0)])
+    decay_chunk = jnp.exp(_segsum(padded))                         # (B,H,nc+1,nc+1)
+    states_in = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states], axis=1)           # (B,nc+1,H,P,N)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn",
+                            decay_chunk.astype(states.dtype), states_in)
+    prev_states = new_states[:, :-1]                               # state entering chunk
+    final_state = new_states[:, -1]
+    # chunk-start state contribution
+    state_decay = jnp.exp(A_cum)                                   # (B,H,nc,Q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cc, prev_states, state_decay.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y, final_state
+
+
+def mamba2_block(p, x, cfg, *, state=None, conv_cache=None, chunk=256,
+                 dtype=jnp.bfloat16):
+    """x (B, L, D) → (B, L, D).  Decode: L == 1 with (state, conv_cache)."""
+    Bsz, L, D = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    z = jnp.einsum("bld,dhp->blhp", x, p["wz"].astype(dtype))
+    xin = jnp.einsum("bld,dhp->blhp", x, p["wx"].astype(dtype))
+    B_ = jnp.einsum("bld,dn->bln", x, p["wB"].astype(dtype))
+    C_ = jnp.einsum("bld,dn->bln", x, p["wC"].astype(dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x.astype(jnp.float32), p["w_dt"]) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])                                       # (H,) < 0
+
+    new_conv_cache = None
+    if conv_cache is None:
+        xin = jax.nn.silu(_causal_conv(
+            xin.reshape(Bsz, L, H * P), p["conv_x"].reshape(-1, H * P).astype(dtype)
+        )).reshape(Bsz, L, H, P)
+        B_ = jax.nn.silu(_causal_conv(B_, p["conv_B"].astype(dtype)))
+        C_ = jax.nn.silu(_causal_conv(C_, p["conv_C"].astype(dtype)))
+    else:
+        # decode: roll the conv window (cache holds the last ks inputs)
+        ks = cfg.ssm_conv
+        cx = jnp.concatenate([conv_cache["x"][:, 1:], xin.reshape(Bsz, 1, H * P)], axis=1)
+        cB = jnp.concatenate([conv_cache["B"][:, 1:], B_], axis=1)
+        cC = jnp.concatenate([conv_cache["C"][:, 1:], C_], axis=1)
+        new_conv_cache = {"x": cx, "B": cB, "C": cC}
+        wx_ = p["conv_x"].reshape(ks, H * P).astype(dtype)
+        xin = jax.nn.silu(jnp.einsum("bkc,kc->bc", cx, wx_)).reshape(Bsz, 1, H, P)
+        B_ = jax.nn.silu(jnp.einsum("bkn,kn->bn", cB, p["conv_B"].astype(dtype)))[:, None]
+        C_ = jax.nn.silu(jnp.einsum("bkn,kn->bn", cC, p["conv_C"].astype(dtype)))[:, None]
+
+    x_dt = xin * dt.astype(dtype)[..., None]
+    log_a = (dt * A).astype(jnp.float32)                           # (B,L,H)
+
+    if state is None and L > 1:
+        ch = min(chunk, L)
+        while L % ch:
+            ch //= 2
+        y, final_state = ssd_chunked(x_dt, log_a, B_, C_, ch)
+    else:
+        s0 = state if state is not None else jnp.zeros((Bsz, H, P, N), dtype)
+        a = jnp.exp(log_a[:, 0])                                   # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", x_dt[:, 0], B_[:, 0])
+        final_state = s0 * a[..., None, None].astype(dtype) + upd
+        y = jnp.einsum("bhpn,bn->bhp", final_state, C_[:, 0])[:, None]
+    y = y + xin * p["D_skip"].astype(dtype)[None, None, :, None]
+    # gated RMSNorm (mamba2) then output projection
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6) * p["out_norm"]).astype(dtype)
+    out = jnp.einsum("blhp,hpd->bld", y, p["wo"].astype(dtype))
+    return out, final_state.astype(dtype), new_conv_cache
+
+
+def init_conv_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, H, P, N = ssm_dims(cfg)
+    ks = cfg.ssm_conv
+    return {
+        "x": jnp.zeros((batch, ks, H * P), dtype),
+        "B": jnp.zeros((batch, ks, N), dtype),
+        "C": jnp.zeros((batch, ks, N), dtype),
+    }

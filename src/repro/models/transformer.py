@@ -1,0 +1,333 @@
+"""Unified block stacks for all 10 architectures.
+
+One ``init_stack``/``apply_stack`` pair per family, all scan-over-layers
+(stacked params, single-layer HLO) with a configurable remat policy:
+
+  dense / vlm  — [ln → attn(GQA/SWA/qk-norm) → ln → mlp] × L
+  moe          — [ln → attn|mla → ln → moe] × L
+  encdec       — encoder [ln → attn(bidir) → ln → mlp] × Le, then decoder
+                 [ln → self-attn → ln → cross-attn → ln → mlp] × Ld
+  xlstm        — groups of (n−1 mLSTM + 1 sLSTM)
+  hybrid       — groups of (n−1 Mamba2 + 1 weight-tied shared attn block)
+
+Caches are stacked along the leading layer axis and consumed by the same
+scans during decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as LL
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm as XL
+from .shardctx import bf16_grad_barrier, constrain
+
+
+
+def _maybe_scan(cfg, body, carry, xs):
+    """lax.scan when cfg.scan_layers else an unrolled python loop (used by
+    the dry-run's flop-calibration compiles; scan bodies are counted once by
+    XLA cost analysis)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = None if ys[0] is None else jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full"
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- dense/moe
+def init_layer(key, cfg, cross=False):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": LL.init_norm(cfg), "ln2": LL.init_norm(cfg)}
+    p["attn"] = LL.init_mla(ks[0], cfg) if cfg.mla else LL.init_attention(ks[0], cfg)
+    if cross:
+        p["ln_x"] = LL.init_norm(cfg)
+        p["xattn"] = LL.init_attention(ks[1], cfg)
+    if cfg.num_experts:
+        p["moe"] = MOE.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = LL.init_mlp(ks[3], cfg)
+    return p
+
+
+def apply_layer(p, x, cfg, positions, *, cache=None, cache_len=None,
+                cross_kv=None, causal=True):
+    dt = _dtype(cfg)
+    h = LL.apply_norm(p["ln1"], x, cfg.norm)
+    if cfg.mla:
+        a, new_cache = LL.mla_block(p["attn"], h, cfg, positions,
+                                    cache=cache, cache_len=cache_len, dtype=dt)
+    else:
+        a, new_cache = LL.attention_block(p["attn"], h, cfg, positions,
+                                          kv_cache=cache, cache_len=cache_len,
+                                          causal=causal, dtype=dt)
+    x = x + a
+    x = constrain(x, "batch", None, None)
+    x = bf16_grad_barrier(x)
+    if "xattn" in p:
+        h = LL.apply_norm(p["ln_x"], x, cfg.norm)
+        a, _ = LL.attention_block(p["xattn"], h, cfg, positions,
+                                  cross_kv=cross_kv, causal=False, dtype=dt)
+        x = x + a
+    h = LL.apply_norm(p["ln2"], x, cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        m, info = MOE.apply_moe(p["moe"], h, cfg, dtype=dt, return_aux=True)
+        aux = info["aux_loss"]
+    else:
+        m = LL.apply_mlp(p["mlp"], h, cfg.mlp, dtype=dt)
+    x = x + m
+    x = constrain(x, "batch", None, None)
+    x = bf16_grad_barrier(x)
+    return x, new_cache, aux
+
+
+def init_dense_stack(key, cfg, n_layers=None, cross=False):
+    L = n_layers or cfg.num_layers
+    keys = jax.random.split(key, L)
+    return jax.vmap(lambda k: init_layer(k, cfg, cross=cross))(keys)
+
+
+def apply_dense_stack(params_L, x, cfg, positions, *, caches=None,
+                      cache_len=None, cross_kv=None, causal=True):
+    """lax.scan over the stacked layer params (and stacked caches)."""
+
+    def body(carry, xs):
+        x, aux = carry
+        if caches is None and cross_kv is None:
+            pl_ = xs
+            x, _, a = apply_layer(pl_, x, cfg, positions, causal=causal)
+            return (x, aux + a), None
+        if caches is None:
+            pl_, ckv = xs
+            x, _, a = apply_layer(pl_, x, cfg, positions, cross_kv=ckv, causal=causal)
+            return (x, aux + a), None
+        if cross_kv is None:
+            pl_, cache_l = xs
+            x, newc, a = apply_layer(pl_, x, cfg, positions, cache=cache_l,
+                                     cache_len=cache_len, causal=causal)
+            return (x, aux + a), newc
+        pl_, cache_l, ckv = xs
+        x, newc, a = apply_layer(pl_, x, cfg, positions, cache=cache_l,
+                                 cache_len=cache_len, cross_kv=ckv, causal=causal)
+        return (x, aux + a), newc
+
+    body = _remat(body, cfg)
+    xs: Any = params_L
+    if caches is not None and cross_kv is not None:
+        xs = (params_L, caches, cross_kv)
+    elif caches is not None:
+        xs = (params_L, caches)
+    elif cross_kv is not None:
+        xs = (params_L, cross_kv)
+    if not cfg.scan_layers:  # unrolled (roofline calibration / small models)
+        L = jax.tree_util.tree_leaves(params_L)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for l in range(L):
+            carry, y = body(carry, jax.tree.map(lambda a: a[l], xs))
+            ys.append(y)
+        new_caches = None if ys[0] is None else jax.tree.map(
+            lambda *zs: jnp.stack(zs), *ys)
+        return carry[0], new_caches, carry[1]
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------- xlstm
+def init_xlstm_stack(key, cfg):
+    G = cfg.num_layers // cfg.xlstm_group
+    n_m = cfg.xlstm_group - 1
+    k1, k2 = jax.random.split(key)
+    mk = jax.random.split(k1, G * n_m).reshape(G, n_m, 2)
+    sk = jax.random.split(k2, G)
+
+    def init_m(k):
+        return {"ln": LL.init_norm(cfg), "cell": XL.init_mlstm(k, cfg)}
+
+    def init_s(k):
+        return {"ln": LL.init_norm(cfg), "cell": XL.init_slstm(k, cfg)}
+
+    return {
+        "mlstm": jax.vmap(jax.vmap(init_m))(mk),
+        "slstm": jax.vmap(init_s)(sk),
+    }
+
+
+def apply_xlstm_stack(params, x, cfg, *, states=None):
+    """states: {"m": (G,n_m,...) mLSTM (C,n,m), "s": (G,...) sLSTM} or None."""
+    dt = _dtype(cfg)
+    decode = states is not None
+
+    def m_body(carry, xs):
+        x = carry[0]
+        if decode:
+            pl_, st = xs
+            h, new_st = XL.mlstm_block(pl_["cell"], LL.apply_norm(pl_["ln"], x, cfg.norm),
+                                       cfg, state=st, dtype=dt)
+            return (x + h,), new_st
+        pl_ = xs
+        h, _ = XL.mlstm_block(pl_["cell"], LL.apply_norm(pl_["ln"], x, cfg.norm),
+                              cfg, chunk=cfg.attn_chunk, dtype=dt)
+        return (x + h,), None
+
+    def g_body(carry, xs):
+        x = carry[0]
+        if decode:
+            gp, gst = xs
+            (x,), new_m = _maybe_scan(cfg, m_body, (x,), (gp["mlstm"], gst["m"]))
+            h, new_s = XL.slstm_block(gp["slstm"]["cell"],
+                                      LL.apply_norm(gp["slstm"]["ln"], x, cfg.norm),
+                                      cfg, state=gst["s"], dtype=dt)
+            return (x + h,), {"m": new_m, "s": new_s}
+        gp = xs
+        (x,), _ = _maybe_scan(cfg, m_body, (x,), gp["mlstm"])
+        h, _ = XL.slstm_block(gp["slstm"]["cell"],
+                              LL.apply_norm(gp["slstm"]["ln"], x, cfg.norm),
+                              cfg, dtype=dt)
+        return (x + h,), None
+
+    g_body = _remat(g_body, cfg)
+    xs = ({"mlstm": params["mlstm"], "slstm": params["slstm"]}, states) if decode \
+        else {"mlstm": params["mlstm"], "slstm": params["slstm"]}
+    if not cfg.scan_layers:
+        return _unrolled_groups(g_body, x, xs)
+    (x,), new_states = jax.lax.scan(g_body, (x,), xs)
+    return x, new_states
+
+
+def init_xlstm_states(cfg, batch):
+    G = cfg.num_layers // cfg.xlstm_group
+    n_m = cfg.xlstm_group - 1
+    H, dh = cfg.num_heads, cfg.head_dim
+    return {
+        "m": (
+            jnp.zeros((G, n_m, batch, H, dh, dh), jnp.float32),
+            jnp.zeros((G, n_m, batch, H, dh), jnp.float32),
+            jnp.zeros((G, n_m, batch, H), jnp.float32),
+        ),
+        "s": (
+            jnp.zeros((G, batch, H, dh), jnp.float32),
+            jnp.ones((G, batch, H, dh), jnp.float32),
+            jnp.zeros((G, batch, H, dh), jnp.float32),
+            jnp.zeros((G, batch, H, dh), jnp.float32),
+        ),
+    }
+
+
+# ---------------------------------------------------------------- hybrid
+def init_hybrid_stack(key, cfg):
+    G = cfg.num_layers // cfg.hybrid_group
+    n_m = cfg.hybrid_group - 1
+    k1, k2 = jax.random.split(key)
+    mk = jax.random.split(k1, G * n_m).reshape(G, n_m, 2)
+
+    def init_m(k):
+        return {"ln": LL.init_norm(cfg), "cell": SSM.init_mamba2(k, cfg)}
+
+    return {
+        "mamba": jax.vmap(jax.vmap(init_m))(mk),
+        "shared_attn": init_layer(k2, cfg),   # ONE weight-tied attn block
+    }
+
+
+def apply_hybrid_stack(params, x, cfg, positions, *, states=None, cache_len=None):
+    """states: {"ssm": (G,n_m,B,H,P,N), "conv": {...}, "attn": (G,...) kv} or None."""
+    dt = _dtype(cfg)
+    decode = states is not None
+    shared = params["shared_attn"]
+
+    def m_body(carry, xs):
+        x = carry[0]
+        if decode:
+            pl_, st, cc = xs
+            h, new_st, new_cc = SSM.mamba2_block(
+                pl_["cell"], LL.apply_norm(pl_["ln"], x, cfg.norm), cfg,
+                state=st, conv_cache=cc, dtype=dt)
+            return (x + h,), (new_st, new_cc)
+        pl_ = xs
+        h, _, _ = SSM.mamba2_block(pl_["cell"], LL.apply_norm(pl_["ln"], x, cfg.norm),
+                                   cfg, chunk=min(cfg.attn_chunk, 256), dtype=dt)
+        return (x + h,), None
+
+    def g_body(carry, xs):
+        x = carry[0]
+        if decode:
+            gp, gst = xs
+            (x,), (new_ssm, new_conv) = _maybe_scan(
+                cfg, m_body, (x,), (gp, gst["ssm"], gst["conv"]))
+            x, new_kv, _ = apply_layer(shared, x, cfg, positions,
+                                       cache=gst["attn"], cache_len=cache_len)
+            return (x,), {"ssm": new_ssm, "conv": new_conv, "attn": new_kv}
+        gp = xs
+        (x,), _ = _maybe_scan(cfg, m_body, (x,), gp)
+        x, _, _ = apply_layer(shared, x, cfg, positions)
+        return (x,), None
+
+    g_body = _remat(g_body, cfg)
+    xs = (params["mamba"], states) if decode else params["mamba"]
+    if not cfg.scan_layers:
+        return _unrolled_groups(g_body, x, xs)
+    (x,), new_states = jax.lax.scan(g_body, (x,), xs)
+    return x, new_states
+
+
+def _unrolled_groups(g_body, x, xs):
+    G = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = (x,)
+    ys = []
+    for g in range(G):
+        carry, y = g_body(carry, jax.tree.map(lambda a: a[g], xs))
+        ys.append(y)
+    new = None if ys[0] is None else jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry[0], new
+
+
+def init_hybrid_states(cfg, batch, cache_seq, dtype=jnp.bfloat16):
+    G = cfg.num_layers // cfg.hybrid_group
+    n_m = cfg.hybrid_group - 1
+    d_inner, H, P, N = SSM.ssm_dims(cfg)
+    conv = SSM.init_conv_cache(cfg, batch, dtype)
+    return {
+        "ssm": jnp.zeros((G, n_m, batch, H, P, N), dtype),
+        "conv": {k: jnp.zeros((G, n_m) + v.shape, dtype) for k, v in conv.items()},
+        "attn": {
+            "k": jnp.zeros((G, batch, cache_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((G, batch, cache_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        },
+    }
+
+
+def init_kv_caches(cfg, batch, cache_seq, n_layers=None, dtype=jnp.bfloat16):
+    L = n_layers or cfg.num_layers
+    if cfg.mla:
+        return {
+            "c_kv": jnp.zeros((L, batch, cache_seq, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((L, batch, cache_seq, cfg.rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((L, batch, cache_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, cache_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }

@@ -1,0 +1,161 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/chunk-queried train path +
+recurrent decode) and sLSTM (scalar memory, lax.scan recurrence).
+
+mLSTM math (xLSTM paper, stabilized):
+    f_t = σ-or-exp forget gate, i_t = exp input gate (log-space handling),
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_tᵀ q_t) / max(|n_tᵀ q_t|, 1)      (we use the exp-free bound 1)
+
+Parallel form: weight of source j at query i is
+    w_ij = exp(li_j + F_i − F_j − m_i),  F = Σ log f,  m_i = row max,
+so y_i = Σ_j w_ij (q_i·k_j) v_j and n·q accumulates the same weights — a
+linear-attention-with-gates kernel.  We chunk over queries (lax.map) so the
+(L, L) weight matrix never fully materializes (needed for prefill_32k).
+
+Heads shard over ``tp`` on the value dim (dv), the state's output axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init
+from .shardctx import constrain
+
+NEG = -1e30
+
+
+def init_mlstm(key, cfg):
+    ks = jax.random.split(key, 8)
+    D, H = cfg.d_model, cfg.num_heads
+    dh = cfg.head_dim
+    pd = jnp.float32
+    return {
+        "wq": _dense_init(ks[0], (D, H, dh), 0, pd),
+        "wk": _dense_init(ks[1], (D, H, dh), 0, pd),
+        "wv": _dense_init(ks[2], (D, H, dh), 0, pd),
+        "wz": _dense_init(ks[3], (D, H, dh), 0, pd),   # output gate branch
+        "w_i": _dense_init(ks[4], (D, H), 0, pd),
+        "w_f": _dense_init(ks[5], (D, H), 0, pd),
+        "b_i": jnp.zeros((H,), pd),
+        "b_f": jnp.ones((H,), pd) * 3.0,               # open forget gates
+        "out_norm": jnp.ones((H, dh), pd),
+        "wo": _dense_init(ks[6], (H, dh, D), (0, 1), pd),
+    }
+
+
+def mlstm_block(p, x, cfg, *, state=None, chunk=1024, dtype=jnp.bfloat16):
+    """x (B,L,D) → (B,L,D). Decode: L == 1 with state (C, n, m, pos_f)."""
+    B, L, D = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(dtype)) / np.sqrt(dh)
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"].astype(dtype))
+    z = jnp.einsum("bld,dhk->blhk", x, p["wz"].astype(dtype))
+    xf = x.astype(jnp.float32)
+    li = jnp.einsum("bld,dh->blh", xf, p["w_i"]) + p["b_i"]        # log input gate
+    lf = jax.nn.log_sigmoid(jnp.einsum("bld,dh->blh", xf, p["w_f"]) + p["b_f"])
+
+    new_state = None
+    if state is None and L > 1:
+        F = jnp.cumsum(lf, axis=1)                                  # (B,L,H)
+        nq = max(1, L // chunk) if L % chunk == 0 else 1
+        cq = L // nq
+
+        @jax.checkpoint  # recompute per-chunk weights in backward (memory)
+        def one_chunk(c):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, c * cq, cq, axis=1)
+            qc, Fc, ic = sl(q), sl(F), sl(li)
+            pos_q = c * cq + jnp.arange(cq)
+            # log weight: li_j + F_i - F_j, causal
+            lw = (Fc[:, :, None] - F[:, None, :] + li[:, None, :]).transpose(0, 3, 1, 2)
+            causal = pos_q[:, None] >= jnp.arange(L)[None, :]
+            lw = jnp.where(causal[None, None], lw, NEG)             # (B,H,cq,L)
+            m = jnp.maximum(jnp.max(lw, axis=-1, keepdims=True), 0.0)
+            w = jnp.exp(lw - m)                                     # (B,H,cq,L)
+            scores = jnp.einsum("bihk,bjhk->bhij", qc, k).astype(jnp.float32)
+            ws = w * scores
+            y = jnp.einsum("bhij,bjhk->bihk", ws.astype(dtype), v)
+            denom = jnp.maximum(jnp.abs(jnp.sum(ws, axis=-1)), jnp.exp(-m[..., 0]))
+            return y / denom.transpose(0, 2, 1)[..., None].astype(dtype)
+
+        y = jax.lax.map(one_chunk, jnp.arange(nq))                  # (nq,B,cq,H,dh)
+        y = y.transpose(1, 0, 2, 3, 4).reshape(B, L, H, dh)
+    else:
+        if state is None:
+            C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+            n0 = jnp.zeros((B, H, dh), jnp.float32)
+            m0 = jnp.zeros((B, H), jnp.float32)
+        else:
+            C0, n0, m0 = state
+        lf0, li0 = lf[:, 0], li[:, 0]
+        m1 = jnp.maximum(lf0 + m0, li0)
+        fw = jnp.exp(lf0 + m0 - m1)[..., None]
+        iw = jnp.exp(li0 - m1)[..., None]
+        k0, v0, q0 = (t[:, 0].astype(jnp.float32) for t in (k, v, q))
+        C1 = fw[..., None] * C0 + iw[..., None] * jnp.einsum("bhv,bhk->bhvk", v0, k0)
+        n1 = fw * n0 + iw * k0
+        num = jnp.einsum("bhvk,bhk->bhv", C1, q0)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n1, q0)), jnp.exp(-m1))
+        y = (num / den[..., None]).astype(dtype)[:, None]
+        new_state = (C1, n1, m1)
+    # per-head norm, output gate, projection
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6) * p["out_norm"]).astype(dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("blhk,hkd->bld", y, p["wo"].astype(dtype))
+    return out, new_state
+
+
+def init_slstm(key, cfg):
+    ks = jax.random.split(key, 9)
+    D, H = cfg.d_model, cfg.num_heads
+    dh = cfg.head_dim
+    pd = jnp.float32
+    p = {"wo": _dense_init(ks[8], (H, dh, D), (0, 1), pd)}
+    for gi, g in enumerate(["i", "f", "z", "o"]):
+        p[f"w_{g}"] = _dense_init(ks[gi], (D, H, dh), 0, pd)
+        p[f"r_{g}"] = _dense_init(ks[gi + 4], (H, dh, dh), 1, pd) * 0.1
+        p[f"b_{g}"] = jnp.zeros((H, dh), pd) if g != "f" else jnp.ones((H, dh), pd)
+    return p
+
+
+def slstm_block(p, x, cfg, *, state=None, dtype=jnp.bfloat16):
+    """Scalar-memory LSTM with exponential gating; recurrent scan over L."""
+    B, L, D = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    pre = {
+        g: jnp.einsum("bld,dhk->blhk", x.astype(jnp.float32), p[f"w_{g}"]) + p[f"b_{g}"]
+        for g in ["i", "f", "z", "o"]
+    }
+    if state is None:
+        c0 = jnp.zeros((B, H, dh), jnp.float32)
+        n0 = jnp.ones((B, H, dh), jnp.float32)
+        h0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.zeros((B, H, dh), jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    R = {g: p[f"r_{g}"] for g in ["i", "f", "z", "o"]}
+
+    def step(carry, t):
+        c, n, h, m = carry
+        gates = {
+            g: pre[g][:, t] + jnp.einsum("bhk,hkj->bhj", h, R[g])
+            for g in ["i", "f", "z", "o"]
+        }
+        lf = jax.nn.log_sigmoid(gates["f"])
+        m1 = jnp.maximum(lf + m, gates["i"])
+        iw = jnp.exp(gates["i"] - m1)
+        fw = jnp.exp(lf + m - m1)
+        c1 = fw * c + iw * jnp.tanh(gates["z"])
+        n1 = fw * n + iw
+        h1 = jax.nn.sigmoid(gates["o"]) * c1 / jnp.maximum(n1, 1e-6)
+        return (c1, n1, h1, m1), h1
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), jnp.arange(L))
+    hs = hs.transpose(1, 0, 2, 3).astype(dtype)                     # (B,L,H,dh)
+    out = jnp.einsum("blhk,hkd->bld", hs, p["wo"].astype(dtype))
+    return out, (c, n, h, m)

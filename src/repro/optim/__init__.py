@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, init_opt_state, apply_updates  # noqa: F401
+from .compression import compress_grads, CompressionState, init_compression  # noqa: F401

@@ -1,0 +1,58 @@
+"""AdamW with dtype-policied moments (bf16 for the 200B+ configs) and
+global-norm clipping.  Pure pytree functional — shards wherever params shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    md = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    md = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        mhat = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        u = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype),
+                m32.astype(md), v32.astype(md))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gn}

@@ -1,0 +1,38 @@
+"""Gradient compression for the data-parallel reduce: per-leaf int8
+quantization with error feedback (the distributed-optimization analogue of
+DBPG's value compression, [19] §5; beyond-paper applied to LM training).
+
+Semantics: q = quantize(g + e);  e' = (g + e) − dequant(q);  the reduce sees
+dequant(q).  On a real fabric the wire carries int8 (4× fewer DCN bytes for
+the cross-pod all-reduce); in-graph we model the numerics exactly, and the
+roofline model credits the cross-pod collective with the 4× byte reduction
+when ``cfg.grad_compress`` is on (launch/roofline.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CompressionState = dict  # error-feedback buffers mirroring grads
+
+
+def init_compression(params) -> CompressionState:
+    return {"ef": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def _q(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale  # dequantized wire value
+
+
+def compress_grads(grads, state: CompressionState):
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        wire = _q(tot)
+        return wire, tot - wire
+
+    out = jax.tree.map(one, grads, state["ef"])
+    wire = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return wire, {"ef": ef}

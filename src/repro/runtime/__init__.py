@@ -1,0 +1,2 @@
+from .fault import TrainLoop, FaultConfig  # noqa: F401
+from .straggler import BoundedDelayAccumulator, StragglerConfig  # noqa: F401

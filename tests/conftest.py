@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only the dry-run (and its subprocess test) forces host devices.
+"""
+import numpy as np
+import pytest
+
+from repro.graphs import text_like, ctr_like, social_like, natural_to_bipartite
+
+
+@pytest.fixture(scope="session")
+def small_text_graph():
+    return text_like(400, 1000, mean_len=30, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_ctr_graph():
+    return ctr_like(400, 2000, nnz_per_row=20, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_social_graph():
+    src, dst, n = social_like(500, m=5, seed=7)
+    return natural_to_bipartite(src, dst, n)

@@ -1,0 +1,54 @@
+"""Property tests for the §4.1 vertex-selection structure."""
+import heapq
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucket_queue import BucketQueue
+
+
+@given(
+    costs=st.lists(st.integers(0, 50), min_size=1, max_size=200),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_matches_heap_under_random_ops(costs, seed):
+    """Interleaved pop-min / decrease-key / delete must match a reference."""
+    rng = np.random.default_rng(seed)
+    q = BucketQueue(np.array(costs), theta=8)  # tiny theta → overflow exercised
+    ref = {i: c for i, c in enumerate(costs)}
+    for _ in range(len(costs) * 2):
+        if not ref:
+            break
+        op = rng.integers(0, 3)
+        if op == 0:
+            i, c = q.pop_min()
+            best = min(ref.values())
+            assert c == best == ref[i]
+            del ref[i]
+        elif op == 1:
+            i = int(rng.choice(list(ref)))
+            new = int(rng.integers(0, ref[i] + 1))
+            q.decrease(i, new)
+            ref[i] = min(ref[i], new)
+        else:
+            i = int(rng.choice(list(ref)))
+            q.delete(i)
+            del ref[i]
+    assert len(q) == len(ref)
+
+
+def test_monotone_pop_order():
+    rng = np.random.default_rng(0)
+    costs = rng.integers(0, 2000, size=500)  # beyond theta
+    q = BucketQueue(costs, theta=100)
+    out = [q.pop_min()[1] for _ in range(500)]
+    assert out == sorted(out)
+
+
+def test_decrease_below_min_bucket():
+    q = BucketQueue(np.array([5, 9]), theta=10)
+    q.decrease(1, 0)
+    assert q.pop_min() == (1, 0)
+    assert q.pop_min() == (0, 5)

@@ -1,0 +1,205 @@
+"""Per-arch smoke tests (reduced configs) + decode/train-path consistency +
+recurrent-vs-parallel equivalences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import transformer as TR
+from repro.models.model import build_model
+
+ARCHS = list_configs()
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        b["patches"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, cfg.num_patches, cfg.d_model)), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one optimizer step on CPU: shapes + no NaNs."""
+    from repro.launch.steps import make_train_step
+
+    cfg = get_config(arch).reduced()
+    model, train_step, init_state, _ = make_train_step(cfg)
+    params, opt = init_state(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    step = jax.jit(train_step)
+    p2, o2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree.map(lambda a, b: a - b, p2, params), 0.0)
+    assert delta > 0
+    # loss decreases over a few steps on a fixed batch
+    p, o = p2, o2
+    l0 = float(metrics["loss"])
+    for _ in range(3):
+        p, o, metrics = step(p, o, batch)
+    assert float(metrics["loss"]) < l0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    cache = model.init_cache(B, 32)
+    if cfg.family == "encdec":
+        kv = TR.init_kv_caches(cfg, B, cfg.encoder_seq, dtype=jnp.float32)
+        cache["cross"] = (kv["k"], kv["v"])
+    step = jax.jit(model.decode_step)
+    for t in range(3):
+        logits, cache = step(params, {
+            "token": jnp.full((B, 1), 3 + t, jnp.int32),
+            "pos": jnp.asarray(t, jnp.int32), "cache": cache})
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "mixtral-8x22b", "deepseek-v2-236b",
+                                  "whisper-medium", "internvl2-76b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Step-by-step decode logits == full-sequence forward logits."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 8
+    batch = _batch(cfg, B, S, seed=2)
+    # full forward logits via loss path surrogate: prefill on the whole prompt
+    logits_full, _ = model.prefill(params, {**batch, "cache_seq": S})
+    # incremental decode
+    cache = model.init_cache(B, S)
+    if cfg.family == "encdec":
+        enc_out = model._encode(params, batch["frames"])
+        cache["cross"] = model._cross_kv(params, enc_out)
+        dec_batch_tokens = batch["tokens"]
+    else:
+        dec_batch_tokens = batch["tokens"]
+    step = jax.jit(model.decode_step)
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode offsets by patch positions; covered by smoke")
+    for t in range(S):
+        logits_step, cache = step(params, {
+            "token": dec_batch_tokens[:, t:t + 1],
+            "pos": jnp.asarray(t, jnp.int32), "cache": cache})
+    np.testing.assert_allclose(
+        np.asarray(logits_step, np.float32),
+        np.asarray(logits_full, np.float32), atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_chunked_matches_recurrence():
+    """Mamba2 SSD chunked scan == step-by-step recurrence."""
+    from repro.models.ssm import ssd_chunked
+
+    rng = np.random.default_rng(0)
+    B, L, H, P, N = 2, 32, 3, 8, 4
+    x = jnp.asarray(rng.normal(0, 1, (B, L, H, P)), jnp.float32)
+    log_a = jnp.asarray(-np.abs(rng.normal(0, 0.5, (B, L, H))), jnp.float32)
+    B_ = jnp.asarray(rng.normal(0, 1, (B, L, N)), jnp.float32)
+    C_ = jnp.asarray(rng.normal(0, 1, (B, L, N)), jnp.float32)
+    y_chunk, final = ssd_chunked(x, log_a, B_, C_, chunk=8)
+    # recurrence
+    state = np.zeros((B, H, P, N), np.float32)
+    ys = []
+    for t in range(L):
+        a = np.exp(np.asarray(log_a[:, t]))          # (B,H)
+        upd = np.einsum("bhp,bn->bhpn", np.asarray(x[:, t]), np.asarray(B_[:, t]))
+        state = state * a[..., None, None] + upd
+        ys.append(np.einsum("bhpn,bn->bhp", state, np.asarray(C_[:, t])))
+    y_rec = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_rec, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(final), state, atol=1e-4, rtol=1e-3)
+
+
+def test_mlstm_parallel_matches_recurrence():
+    """mLSTM chunk-queried parallel form == recurrent decode steps."""
+    from repro.models.xlstm import init_mlstm, mlstm_block
+
+    cfg = get_config("xlstm-350m").reduced()
+    p = init_mlstm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, L = 2, 12
+    x = jnp.asarray(rng.normal(0, 0.5, (B, L, cfg.d_model)), jnp.float32)
+    y_par, _ = mlstm_block(p, x, cfg, chunk=4, dtype=jnp.float32)
+    state = None
+    ys = []
+    for t in range(L):
+        y_t, state = mlstm_block(p, x[:, t:t + 1], cfg, state=state,
+                                 dtype=jnp.float32)
+        ys.append(np.asarray(y_t))
+    y_rec = np.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), y_rec, atol=2e-4, rtol=2e-3)
+
+
+def test_unrolled_matches_scanned():
+    """cfg.scan_layers=False (calibration path) is numerically identical."""
+    cfg = get_config("qwen3-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    l1, _ = model.loss_fn(params, batch)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    model2 = build_model(cfg2)
+    l2, _ = model2.loss_fn(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_swa_ring_buffer_decode():
+    """Mixtral-style SWA ring cache: decoding past the window stays finite
+    and matches a full-cache decode inside the window."""
+    cfg = get_config("mixtral-8x22b").reduced()
+    cfg = dataclasses.replace(cfg, swa_window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, W = 1, 8
+    ring = model.init_cache(B, W, ring=True)
+    full = model.init_cache(B, 64)
+    step = jax.jit(model.decode_step)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=24)
+    for t, tok in enumerate(toks):
+        tk = jnp.full((B, 1), int(tok), jnp.int32)
+        lr, ring = step(params, {"token": tk, "pos": jnp.asarray(t, jnp.int32),
+                                 "cache": ring})
+        lf, full = step(params, {"token": tk, "pos": jnp.asarray(t, jnp.int32),
+                                 "cache": full})
+        assert bool(jnp.all(jnp.isfinite(lr)))
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(lf),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_bf16_grad_barrier_retypes_cotangent():
+    """§Perf #7: the barrier forces bf16 cotangents (and is identity fwd)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.shardctx import bf16_grad_barrier
+
+    def f(x, w):
+        h = bf16_grad_barrier(x)
+        return jnp.sum(jnp.square((h @ w).astype(jnp.float32)))
+
+    x = jnp.ones((4, 8), jnp.bfloat16)
+    w = jnp.ones((8, 4), jnp.bfloat16)
+    g = jax.grad(f)(x, w)
+    assert g.dtype == jnp.bfloat16
+    # fp32 passthrough (smoke configs)
+    x32 = jnp.ones((4, 8), jnp.float32)
+    assert bf16_grad_barrier(x32).dtype == jnp.float32

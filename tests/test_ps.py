@@ -1,0 +1,75 @@
+"""Parameter-server application (§5.5): DBPG convergence, Parsa vs random
+traffic, KKT filter + compression semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import random_parts
+from repro.core.placement import build_placement, gather_traffic
+from repro.ml import DBPGConfig, PSCluster, make_problem
+from repro.ml.dbpg import dequantize_int8, kkt_filter, quantize_int8, soft_threshold
+from repro.graphs import ctr_like
+
+
+@pytest.fixture(scope="module")
+def lr_setup():
+    g = ctr_like(500, 1500, nnz_per_row=15, seed=11)
+    w_star, labels = make_problem(g, seed=11)
+    return g, labels
+
+
+def test_dbpg_converges(lr_setup):
+    g, labels = lr_setup
+    k = 4
+    cfg = DBPGConfig(lam=0.3, lr=0.005, max_delay=0, compress=False, kkt_eps=0.0)
+    pl = build_placement(g, k, b=2, a=0)
+    cl = PSCluster(g, labels, pl.doc_to_shard, pl.vocab_to_shard, k, cfg)
+    r = cl.run(20, log_every=5)
+    objs = r["objective"]
+    assert objs[-1] < objs[0] * 0.85
+
+
+def test_parsa_reduces_inter_machine_traffic(lr_setup):
+    g, labels = lr_setup
+    k = 8
+    cfg = DBPGConfig(lam=0.3, lr=0.03)
+    pl = build_placement(g, k, b=4, a=2)
+    r_parsa = PSCluster(g, labels, pl.doc_to_shard, pl.vocab_to_shard, k, cfg).run(5)
+    r_rand = PSCluster(g, labels, random_parts(g.num_u, k, 0),
+                       random_parts(g.num_v, k, 1), k, cfg).run(5)
+    assert r_parsa["inter_bytes"] < r_rand["inter_bytes"]
+    assert r_parsa["inner_fraction"] > r_rand["inner_fraction"]
+    t = gather_traffic(g, pl)
+    assert t["local_fraction"] > 1.0 / k  # beats random's expectation
+
+
+def test_bounded_delay_still_converges(lr_setup):
+    g, labels = lr_setup
+    k = 4
+    cfg = DBPGConfig(lam=0.3, lr=0.003, max_delay=3)
+    pl = build_placement(g, k, b=2, a=0)
+    r = PSCluster(g, labels, pl.doc_to_shard, pl.vocab_to_shard, k, cfg).run(
+        20, log_every=19)
+    assert r["objective"][-1] < r["objective"][0]
+
+
+def test_kkt_filter_keeps_active_coords():
+    w = jnp.asarray([0.0, 0.0, 1.0, -2.0])
+    g = jnp.asarray([0.05, 0.5, 0.01, 0.3])
+    keep = kkt_filter(w, g, lam=0.2, eps=0.1)
+    # coord 0: w=0, |g|=.05 ≤ .18 → filtered; coord 1: |g|=.5 > .18 → kept
+    assert list(np.asarray(keep)) == [False, True, True, True]
+
+
+def test_quantization_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3, 1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_soft_threshold():
+    w = jnp.asarray([-3.0, -0.1, 0.0, 0.1, 3.0])
+    out = np.asarray(soft_threshold(w, 0.5))
+    np.testing.assert_allclose(out, [-2.5, 0, 0, 0, 2.5])
