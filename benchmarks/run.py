@@ -28,7 +28,7 @@ def main() -> None:
         "fig10": lambda: bench_fig10_scalability.run(scale=0.6 * scale),
         "table34": lambda: bench_table34_dbpg.run(scale=scale),
         "embedding": lambda: bench_embedding_traffic.run(),
-        "kernels": lambda: bench_kernels.run(),
+        "kernels": lambda: bench_kernels.run(scale=scale),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -1,0 +1,36 @@
+"""Version compatibility shims.
+
+``shard_map``: modern jax exposes ``jax.shard_map`` with a ``check_vma``
+kwarg; jax 0.4.x only has ``jax.experimental.shard_map`` whose equivalent
+kwarg is ``check_rep`` — and some transitional releases export the
+top-level name while still taking ``check_rep``.  So the shim keys on the
+actual signature, not on where the import succeeded: call sites can always
+use the modern ``check_vma`` spelling.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # modern jax
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+try:
+    _HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+except (TypeError, ValueError):  # builtins / C callables: assume modern
+    _HAS_CHECK_VMA = True
+
+if _HAS_CHECK_VMA:
+    shard_map = _shard_map
+else:
+
+    def shard_map(f=None, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if f is None:
+            return lambda g: _shard_map(g, **kwargs)
+        return _shard_map(f, **kwargs)
+
+
+__all__ = ["shard_map"]

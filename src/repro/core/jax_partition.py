@@ -1,69 +1,207 @@
 r"""TPU-native Parsa: blocked greedy over packed bitmasks (DESIGN.md §2).
 
 The CPU algorithm's O(1) pointer updates don't map to TPU; instead we
-*recompute over blocks*: for a block of B candidate vertices we evaluate the
-full (B × k) cost tile with the parsa_cost Pallas kernel, then run a
-device-side greedy loop of B steps — each step picks the partition to grow
-(smallest size, Alg 1 line 7 / §4.1 perfect balance), selects the
-minimum-cost unassigned vertex *within the block*, commits it, ORs its
-neighbor mask into S_i, and down-dates only column i of the cost tile with
-one popcount pass (cost never increases — same monotonicity the bucket
-queue exploits).
+*recompute over blocks*: a block of B candidate vertices is greedily
+assigned by repeatedly picking the partition to grow (smallest size, Alg 1
+line 7 / §4.1 perfect balance) and the minimum-cost unassigned vertex
+within the block for it.  Block-local greedy is a sampling approximation in
+exactly the sense of §4.2 (a block plays the role of a subgraph R); quality
+deltas vs the sequential reference are measured in
+benchmarks/bench_table2.py.
 
-Block-local greedy is a sampling approximation in exactly the sense of §4.2
-(a block plays the role of a subgraph R); quality deltas vs the sequential
-reference are measured in benchmarks/bench_table2.py.
+Dispatch model (one scan, donated carries, fused select)
+--------------------------------------------------------
 
-``shard_parsa`` maps Alg 4 onto shard_map: each device on the ``data`` axis
-partitions its own U-shard block-by-block against a device-local *stale*
-bitmask copy; every ``merge_every`` blocks an all_gather + OR merges the
-sets — the bulk-synchronous image of the parameter server's union-push
-(server line 9), with τ == merge_every − 1 blocks of staleness.
+The pipeline is fully device-resident:
+
+1. *Packing* — the whole permuted U is packed host-side in one vectorized
+   sorted pass over the edge array (``pack_bitmask_csr_sparse``; zero
+   Python-level per-vertex work) into per-row *compact word lists* plus a
+   tiny dense side channel for rows with more than ``cap`` nonzero words.
+   No dense ``(n_blocks, B, W)`` stack exists on either host or device:
+   each block's (B, W) bitmask is rebuilt inside the scan by a 12K-element
+   scatter-add (``_rebuild_nbr``).
+
+2. *One dispatch* — ``blocked_partition_u`` issues a single jitted
+   ``jax.lax.scan`` over the block stack (``_partition_scan``) with the
+   ``(S, sizes)`` carries donated, instead of one host dispatch per block.
+   ``DISPATCH_COUNTS`` records exactly one entry per partition call.
+
+3. *Greedy rounds + fused select* — perfect balance makes the partition
+   visit order deterministic: when partition sizes differ by at most one
+   (always true here: sizes start equal and every round preserves it), the
+   next k picks visit each partition exactly once — first the catch-up set
+   (partitions at the current min size, in index order), then full rounds
+   in plain index order.  ``_assign_block_rounds`` therefore runs
+   ceil-ish(B/k) *rounds* instead of B scalar steps.  Each round selects
+   one vertex per partition with progressive retirement — on TPU via the
+   fused cost+select Pallas kernel (``parsa_cost_select``), which reduces
+   the (B, k) cost tile to per-partition (min, argmin) inside VMEM without
+   materializing it, enabling B=1024 blocks; on CPU (``use_kernel=False``)
+   from a down-dated cost tile whose per-round update gathers only the
+   ≤ cap nonzero words of each selected vertex's mask (dense fallback via
+   ``lax.cond`` when a hub vertex exceeds cap — bit-exact either way).
+
+   Both paths produce *identical* assignments to the sequential per-vertex
+   reference ``blocked_partition_u_hostloop`` (property-tested), because a
+   round's selections see exactly the tile state the per-vertex loop would:
+   within a round each column is picked at most once, down-dates touch only
+   the picked column, and cross-column interaction is pure retirement.
+
+``shard_parsa_step`` maps Alg 4 onto shard_map: each device on the ``data``
+axis partitions its own U-shard block-by-block against a device-local
+*stale* bitmask copy; every ``merge_every`` blocks an all_gather + OR
+merges the sets — the bulk-synchronous image of the parameter server's
+union-push (server line 9), with τ == merge_every − 1 blocks of staleness.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.parsa_cost import pack_bitmask, parsa_cost
+from ..kernels.parsa_cost import (
+    BIG,
+    pack_bitmask,
+    pack_bitmask_csr_sparse,
+    parsa_cost,
+    parsa_cost_select,
+    select_greedy_from_cost,
+)
 from .bipartite import BipartiteGraph
 
-__all__ = ["blocked_partition_u", "shard_parsa_step", "pack_graph_blocks"]
+__all__ = [
+    "blocked_partition_u",
+    "blocked_partition_u_hostloop",
+    "shard_parsa_step",
+    "pack_graph_blocks",
+    "PackedBlocks",
+    "DISPATCH_COUNTS",
+]
+
+# One entry per *host→device pipeline launch*; blocked_partition_u bumps it
+# exactly once per call regardless of graph size (O(1)-dispatch invariant,
+# asserted in tests/test_jax_partition.py).
+DISPATCH_COUNTS = {"partition_scan": 0}
 
 
-def pack_graph_blocks(graph: BipartiteGraph, block: int) -> list[tuple[np.ndarray, np.ndarray]]:
-    """Split U into contiguous blocks and pack each block's neighbor bitmasks."""
-    out = []
-    for start in range(0, graph.num_u, block):
-        ids = np.arange(start, min(start + block, graph.num_u))
-        masks = pack_bitmask([graph.neighbors(int(u)) for u in ids], graph.num_v)
-        out.append((ids, masks))
-    return out
+class PackedBlocks(NamedTuple):
+    """Device-ready blocked packing of (a permutation of) U.
+
+    The dense (B, W) bitmask of a block is *not* stored — it is rebuilt on
+    device inside the scan from the compact word lists (a 12K-element
+    scatter-add per block), so the packing ships ~cap words per vertex
+    instead of W.  The rare rows with more than ``cap`` nonzero words ride
+    along densely in ``tr_masks`` and overwrite their rebuilt row.
+    """
+
+    valid: np.ndarray     # (n_blocks, B) bool — False for padding rows
+    widx: np.ndarray      # (n_blocks, B, cap) int32 nonzero-word indices
+    vals: np.ndarray      # (n_blocks, B, cap) int32 word values at widx
+    trunc: np.ndarray     # (n_blocks, B) bool — row has > cap nonzero words
+    tr_ids: np.ndarray    # (n_blocks, TB) int32 local row of each truncated
+                          #   row; B (out of range → dropped) for padding
+    tr_masks: np.ndarray  # (n_blocks, TB, W) int32 full masks of those rows
+    order: np.ndarray     # (num_u,) int64 — global vertex id per packed row
 
 
+def pack_graph_blocks(
+    graph: BipartiteGraph,
+    block: int,
+    order: np.ndarray | None = None,
+    cap: int = 48,
+) -> PackedBlocks:
+    """Pack all of U (in ``order``) into padded (n_blocks, B, …) stacks.
+
+    Fully vectorized: one CSR gather + one sorted pass over the edge array
+    yields the compact word lists and the truncated-row side channel.  No
+    per-vertex Python work, and no dense (n, W) array on the host.
+    """
+    n = graph.num_u
+    if order is None:
+        order = np.arange(n, dtype=np.int64)
+    order = np.asarray(order, dtype=np.int64)
+    uniq, wordvals, widx, vals, trunc = pack_bitmask_csr_sparse(
+        graph.u_indptr, graph.u_indices, graph.num_v, rows=order, cap=cap)[:5]
+    W = (graph.num_v + 31) // 32
+    n_blocks = max(1, -(-n // block))
+    pad = n_blocks * block - n
+    if pad:
+        widx = np.pad(widx, [(0, pad), (0, 0)])
+        vals = np.pad(vals, [(0, pad), (0, 0)])
+        trunc = np.pad(trunc, [(0, pad)])
+    valid = (np.arange(n_blocks * block) < n).reshape(n_blocks, block)
+    # side channel: full masks of truncated rows, grouped per block
+    t_rows = np.flatnonzero(trunc)                       # padded row ids
+    t_block = t_rows // block
+    t_counts = np.bincount(t_block, minlength=n_blocks)
+    TB = max(1, int(t_counts.max()) if t_rows.size else 1)
+    tr_ids = np.full((n_blocks, TB), block, np.int32)    # block == dropped
+    tr_masks = np.zeros((n_blocks, TB, W), np.int32)
+    if t_rows.size:
+        t_starts = np.concatenate([[0], np.cumsum(t_counts)[:-1]])
+        slot = np.arange(t_rows.size, dtype=np.int64) - t_starts[t_block]
+        tr_ids[t_block, slot] = (t_rows % block).astype(np.int32)
+        trunc_idx = np.full(n_blocks * block, -1, np.int64)
+        trunc_idx[t_rows] = t_block * TB + slot
+        r = uniq // W
+        member = trunc[r]
+        tr_masks.reshape(-1, W)[trunc_idx[r[member]], uniq[member] % W] = \
+            wordvals[member]
+    return PackedBlocks(
+        valid=valid,
+        widx=widx.reshape(n_blocks, block, cap),
+        vals=vals.reshape(n_blocks, block, cap),
+        trunc=trunc.reshape(n_blocks, block),
+        tr_ids=tr_ids,
+        tr_masks=tr_masks,
+        order=order,
+    )
+
+
+# --------------------------------------------------------------------------
+# Sequential per-vertex reference (the seed implementation, kept as the
+# parity oracle and benchmark baseline).
+# --------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("k", "use_kernel", "interpret"))
 def _assign_block(
     nbr: jax.Array,        # (B, W) int32 packed N(u)
     s_masks: jax.Array,    # (k, W) int32 packed S_i
     sizes: jax.Array,      # (k,) int32 |U_i|
+    valid: jax.Array | None = None,  # (B,) bool — padding rows, if any
     *,
     k: int,
     use_kernel: bool = True,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Greedy-assign every vertex in the block. Returns (parts, S', sizes')."""
+    """Greedy-assign every vertex in the block, one scalar step at a time.
+
+    Returns (parts, S', sizes').  This is the sequential reference: B scan
+    steps, each down-dating one column of the (B, k) cost tile.  With
+    ``valid=None`` the loop is exactly the seed implementation (the parity
+    oracle — every row is assigned).  Passing ``valid`` marks padding rows
+    unpickable so a ragged block doesn't leak phantom picks into ``sizes``
+    or skew the assignment order.
+    """
     B, W = nbr.shape
     cost = parsa_cost(nbr, s_masks, use_kernel=use_kernel, interpret=interpret)  # (B, k)
-    BIG = jnp.int32(2**30)
+    if valid is not None:
+        cost = jnp.where(valid[:, None], cost, BIG)
 
     def step(state, _):
         cost, s_masks, sizes, parts = state
         i = jnp.argmin(sizes)  # partition to grow (perfect balance)
         u = jnp.argmin(cost[:, i])  # cheapest unassigned vertex in block
-        mask_u = nbr[u]
+        if valid is None:
+            active = jnp.bool_(True)
+        else:
+            # once only retired/padding rows remain their cost sits near
+            # BIG (down-dates can drift it a little); stop assigning then
+            active = cost[u, i] < BIG // 2
+        mask_u = jnp.where(active, nbr[u], 0)
         delta = mask_u & ~s_masks[i]
         new_si = s_masks[i] | mask_u
         # down-date column i only: cost never increases (§4.1)
@@ -71,14 +209,196 @@ def _assign_block(
         cost = cost.at[:, i].add(-dec)
         cost = cost.at[u, :].set(BIG)  # retire u from the block
         s_masks = s_masks.at[i].set(new_si)
-        sizes = sizes.at[i].add(1)
-        parts = parts.at[u].set(i.astype(jnp.int32))
+        sizes = sizes.at[i].add(active.astype(jnp.int32))
+        parts = parts.at[u].set(
+            jnp.where(active, i.astype(jnp.int32), parts[u]))
         return (cost, s_masks, sizes, parts), None
 
     parts0 = jnp.full((B,), -1, jnp.int32)
     (cost, s_masks, sizes, parts), _ = jax.lax.scan(
         step, (cost, s_masks, sizes, parts0), None, length=B
     )
+    return parts, s_masks, sizes
+
+
+# --------------------------------------------------------------------------
+# Rounds-based device-resident block greedy.
+# --------------------------------------------------------------------------
+def _rebuild_nbr(widx: jax.Array, vals: jax.Array,
+                 tr_ids: jax.Array, tr_masks: jax.Array) -> jax.Array:
+    """Densify a block's (B, W) bitmask from its compact word lists.
+
+    Padding slots all target word 0 with value 0, so scatter-*add* is
+    duplicate-safe; truncated rows are then overwritten with their full
+    masks (tr_ids == B ⇒ dropped)."""
+    B, _ = widx.shape
+    W = tr_masks.shape[-1]
+    nbr = jnp.zeros((B, W), jnp.int32)
+    nbr = nbr.at[jnp.arange(B, dtype=jnp.int32)[:, None], widx].add(vals)
+    return nbr.at[tr_ids].set(tr_masks, mode="drop")
+
+
+def _assign_block_rounds(
+    valid: jax.Array,     # (B,) bool
+    widx: jax.Array,      # (B, cap) int32
+    vals: jax.Array,      # (B, cap) int32
+    trunc: jax.Array,     # (B,) bool
+    tr_ids: jax.Array,    # (TB,) int32
+    tr_masks: jax.Array,  # (TB, W) int32
+    s_masks: jax.Array,   # (k, W) int32
+    sizes: jax.Array,     # (k,) int32
+    *,
+    k: int,
+    use_kernel: bool,
+    interpret: bool | None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Greedy-assign a block in balanced rounds.  Returns (parts, S', sizes').
+
+    Identical output to ``_assign_block`` whenever sizes differ by ≤ 1 at
+    entry (property-tested); on the kernel path the cost tile lives only in
+    VMEM (fused cost+select), on the jnp path it is carried and down-dated
+    sparsely via the compact word lists.
+    """
+    nbr = _rebuild_nbr(widx, vals, tr_ids, tr_masks)
+    B, W = nbr.shape
+    retired0 = ~valid
+    parts0 = jnp.full((B,), -1, jnp.int32)
+    cap = widx.shape[1]
+    iota_b = jnp.arange(B, dtype=jnp.int32)
+    iota_k = jnp.arange(k, dtype=jnp.int32)
+
+    if use_kernel:
+        # Fused cost+select recomputes the (B, k) tile in VMEM each round
+        # and reduces it in the same pass — no tile is carried at all, so
+        # the state holds a placeholder.
+        tile0 = jnp.zeros((1, 1), jnp.int32)
+    else:
+        # jnp path: carry the tile and down-date it sparsely.  Initial tile
+        # cost[v, i] = deg(v) − |N(v) ∩ S_i|: the intersection only touches
+        # each row's ≤ cap nonzero words, so gather S at widx instead of
+        # the dense (B, k, W) product; any truncated row in the block trips
+        # the exact dense fallback (rare for cap ≈ 48).
+        deg = jax.lax.population_count(vals).astype(jnp.int32).sum(-1)
+
+        def sparse_init(_):
+            sg = s_masks[:, widx.reshape(-1)].reshape(k, B, cap)
+            inter = jax.lax.population_count(
+                sg & vals[None]).astype(jnp.int32).sum(-1)  # (k, B)
+            return deg[:, None] - inter.T
+
+        def dense_init(_):
+            return parsa_cost(nbr, s_masks, use_kernel=False)
+
+        tile0 = jax.lax.cond(trunc.any(), dense_init, sparse_init, None)
+
+    def round_body(state, ord_, en):
+        """One greedy round.  ord_ = None means the identity visit order
+        0..k-1 (every round after the catch-up), which skips all the
+        slot→partition permutation gathers."""
+        tile, s_masks, sizes, parts, retired = state
+        if use_kernel:
+            u_sel, c_sel = parsa_cost_select(
+                nbr, s_masks, retired,
+                order=iota_k if ord_ is None else ord_, enabled=en,
+                use_kernel=True, interpret=interpret)
+        else:
+            u_sel, c_sel = select_greedy_from_cost(tile, retired, ord_, en)
+        act = c_sel < BIG
+        u_safe = jnp.where(act, u_sel, 0)
+        sel_nbr = nbr[u_safe]                              # (k, W)
+        if not use_kernel:
+            # Down-date values in compact space: delta_j's nonzero words
+            # are a subset of the selected vertex's word list, so gather S
+            # (pre-update) at widx[u_j] instead of materializing delta
+            # full-width.  Padding slots carry vals == 0 → contribute 0.
+            d_widx = widx[u_safe]                          # (k, cap)
+            d_sel_vals = vals[u_safe]
+            if ord_ is None:
+                s_at = jnp.take_along_axis(s_masks, d_widx, axis=1)
+            else:
+                s_at = s_masks[ord_[:, None], d_widx]
+            d_vals = jnp.where(act[:, None], d_sel_vals & ~s_at, 0)
+
+            def sparse_dec(_):
+                g = nbr[:, d_widx.reshape(-1)].reshape(B, k, cap)
+                return jax.lax.population_count(
+                    g & d_vals[None]).astype(jnp.int32).sum(-1)
+
+            def dense_dec(_):
+                s_cols = s_masks if ord_ is None else s_masks[ord_]
+                delta = jnp.where(act[:, None], sel_nbr & ~s_cols, 0)
+                return jax.lax.population_count(
+                    nbr[:, None, :] & delta[None]).astype(jnp.int32).sum(-1)
+
+            any_trunc = jnp.any(act & trunc[u_safe])
+            dec = jax.lax.cond(any_trunc, dense_dec, sparse_dec, None)
+        # commit: S_i |= N(u), sizes, parts, retirement, tile down-date
+        add = jnp.where(act[:, None], sel_nbr, 0)
+        match = (iota_b[:, None] == u_sel[None, :]) & act[None, :]  # (B, k)
+        assigned = match.any(axis=1)
+        retired = retired | assigned
+        if ord_ is None:
+            s_masks = s_masks | add
+            sizes = sizes + act.astype(jnp.int32)
+            col_id = (match * iota_k[None, :]).sum(axis=1).astype(jnp.int32)
+            if not use_kernel:
+                tile = tile - dec
+        else:
+            inv = jnp.argsort(ord_)
+            s_masks = s_masks | add[inv]
+            sizes = sizes + act[inv].astype(jnp.int32)
+            col_id = (match * ord_[None, :]).sum(axis=1).astype(jnp.int32)
+            if not use_kernel:
+                tile = tile - dec[:, inv]
+        parts = jnp.where(assigned, col_id, parts)
+        return tile, s_masks, sizes, parts, retired
+
+    # catch-up round (partition visit order = stable argsort of sizes,
+    # only the min-sized partitions may pick), then full identity rounds
+    ord0 = jnp.argsort(sizes, stable=True).astype(jnp.int32)
+    en0 = sizes[ord0] == jnp.min(sizes)
+    state = round_body((tile0, s_masks, sizes, parts0, retired0), ord0, en0)
+    en_all = jnp.ones((k,), bool)
+
+    def full_round(state, _):
+        return round_body(state, None, en_all), None
+
+    n_full = -(-(B - 1) // k)  # catch-up may assign as little as one vertex
+    (_, s_masks, sizes, parts, _), _ = jax.lax.scan(
+        full_round, state, None, length=n_full)
+    return parts, s_masks, sizes
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "use_kernel", "interpret"),
+    donate_argnums=(6, 7),
+)
+def _partition_scan(
+    valid: jax.Array,     # (n_blocks, B) bool
+    widx: jax.Array,      # (n_blocks, B, cap) int32
+    vals: jax.Array,      # (n_blocks, B, cap) int32
+    trunc: jax.Array,     # (n_blocks, B) bool
+    tr_ids: jax.Array,    # (n_blocks, TB) int32
+    tr_masks: jax.Array,  # (n_blocks, TB, W) int32
+    s_masks: jax.Array,   # (k, W) int32 — donated
+    sizes: jax.Array,     # (k,) int32 — donated
+    *,
+    k: int,
+    use_kernel: bool,
+    interpret: bool | None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The whole partition as ONE XLA dispatch: scan blocks, carry (S, sizes)."""
+
+    def per_block(carry, xs):
+        s, sz = carry
+        parts, s, sz = _assign_block_rounds(
+            *xs, s, sz, k=k, use_kernel=use_kernel, interpret=interpret)
+        return (s, sz), parts
+
+    (s_masks, sizes), parts = jax.lax.scan(
+        per_block, (s_masks, sizes),
+        (valid, widx, vals, trunc, tr_ids, tr_masks))
     return parts, s_masks, sizes
 
 
@@ -90,8 +410,50 @@ def blocked_partition_u(
     use_kernel: bool = True,
     interpret: bool | None = None,
     seed: int = 0,
+    cap: int = 48,
 ) -> np.ndarray:
-    """Host-driven blocked greedy partition (single 'device'). Returns parts_u."""
+    """Device-resident blocked greedy partition.  Returns parts_u.
+
+    Packs the entire permuted U once (vectorized, compact word lists —
+    ~cap words per vertex instead of W; the dense (B, W) bitmask of each
+    block is rebuilt on device inside the scan, so a gigabyte-scale stack
+    never exists on either side) and issues one jitted scan over the block
+    stack — O(1) XLA dispatches per call.
+    """
+    W = (graph.num_v + 31) // 32
+    if init_sets is None:
+        s_masks = jnp.zeros((k, W), jnp.int32)
+    else:
+        s_masks = jnp.asarray(pack_bitmask(np.asarray(init_sets, bool), graph.num_v))
+    sizes = jnp.zeros((k,), jnp.int32)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(graph.num_u)
+    packed = pack_graph_blocks(graph, block, order=order, cap=cap)
+    DISPATCH_COUNTS["partition_scan"] += 1
+    parts_blocks, _, _ = _partition_scan(
+        jnp.asarray(packed.valid), jnp.asarray(packed.widx),
+        jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
+        jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
+        s_masks, sizes,
+        k=k, use_kernel=use_kernel, interpret=interpret)
+    flat = np.asarray(parts_blocks).reshape(-1)[: graph.num_u]
+    parts = np.full(graph.num_u, -1, np.int32)
+    parts[order] = flat
+    return parts
+
+
+def blocked_partition_u_hostloop(
+    graph: BipartiteGraph,
+    k: int,
+    block: int = 256,
+    init_sets: np.ndarray | None = None,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """The seed implementation: per-block Python packing + one dispatch per
+    block + per-vertex greedy.  Kept verbatim as the parity oracle and the
+    benchmark baseline for the single-dispatch pipeline."""
     W = (graph.num_v + 31) // 32
     if init_sets is None:
         s_masks = jnp.zeros((k, W), jnp.int32)
@@ -112,23 +474,41 @@ def blocked_partition_u(
     return parts
 
 
-def shard_parsa_step(k: int, axis: str = "data", use_kernel: bool = False):
-    """Return a shard_map-able body: (local nbr blocks, S, sizes) → assignment.
+def shard_parsa_step(k: int, axis: str = "data", use_kernel: bool = False,
+                     select: str = "rounds", interpret: bool | None = None):
+    """Return a shard_map-able body: (local packed block stack, S, sizes) →
+    assignment.
 
-    Each device processes its (n_blocks, B, W) stack of packed blocks against
-    its local S copy, then merges S across ``axis`` by all_gather + OR and
-    sizes by psum — one Alg 4 round with τ = n_blocks − 1.
+    Each device processes its (n_blocks, B, …) stack (from
+    ``pack_graph_blocks`` on its U-shard) against its local S copy, then
+    merges S across ``axis`` by all_gather + OR and sizes by psum — one
+    Alg 4 round with τ = n_blocks − 1.
+
+    ``select="rounds"`` uses the balanced-rounds pipeline (fused
+    cost+select; exact vs the sequential loop while global sizes differ by
+    ≤ 1, and a balanced approximation thereof once cross-device psums widen
+    the gap).  ``select="seq"`` keeps the per-vertex reference loop.
     """
 
-    def body(nbr_blocks: jax.Array, s_masks: jax.Array, sizes: jax.Array):
-        def per_block(carry, nbr):
+    def body(valid: jax.Array, widx: jax.Array, vals: jax.Array,
+             trunc: jax.Array, tr_ids: jax.Array, tr_masks: jax.Array,
+             s_masks: jax.Array, sizes: jax.Array):
+        def per_block(carry, xs):
             s_masks, sizes = carry
-            parts, s_masks, sizes = _assign_block(
-                nbr, s_masks, sizes, k=k, use_kernel=use_kernel
-            )
+            val, wi, va, tr, ti, tm = xs
+            if select == "rounds":
+                parts, s_masks, sizes = _assign_block_rounds(
+                    val, wi, va, tr, ti, tm, s_masks, sizes,
+                    k=k, use_kernel=use_kernel, interpret=interpret)
+            else:
+                parts, s_masks, sizes = _assign_block(
+                    _rebuild_nbr(wi, va, ti, tm), s_masks, sizes, val,
+                    k=k, use_kernel=use_kernel, interpret=interpret)
             return (s_masks, sizes), parts
 
-        (s_masks, sizes), parts = jax.lax.scan(per_block, (s_masks, sizes), nbr_blocks)
+        (s_masks, sizes), parts = jax.lax.scan(
+            per_block, (s_masks, sizes),
+            (valid, widx, vals, trunc, tr_ids, tr_masks))
         # server union-push: OR-merge neighbor sets across the data axis
         gathered = jax.lax.all_gather(s_masks, axis)  # (n_dev, k, W)
         merged = jax.lax.reduce(

@@ -1,2 +1,17 @@
-from .ops import parsa_cost, pack_bitmask  # noqa: F401
-from .ref import parsa_cost_ref  # noqa: F401
+from .ops import (  # noqa: F401
+    compact_row_words,
+    pack_bitmask,
+    pack_bitmask_csr,
+    pack_bitmask_csr_compact,
+    pack_bitmask_csr_sparse,
+    parsa_cost,
+    parsa_cost_select,
+)
+from .ref import (  # noqa: F401
+    BIG,
+    parsa_cost_ref,
+    parsa_select_greedy_ref,
+    parsa_select_ref,
+    select_from_cost,
+    select_greedy_from_cost,
+)

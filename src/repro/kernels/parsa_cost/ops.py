@@ -1,4 +1,5 @@
-"""jit'd public wrapper for the parsa_cost kernel (padding + dispatch)."""
+"""jit'd public wrappers for the parsa_cost / parsa_select kernels
+(padding + dispatch) and the host-side bitmask packing routines."""
 from __future__ import annotations
 
 import jax
@@ -6,7 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .parsa_cost import parsa_cost_kernel
-from .ref import parsa_cost_ref
+from .ref import (
+    parsa_cost_ref,
+    parsa_select_greedy_ref,
+    parsa_select_ref,
+)
+from .select import parsa_select_kernel
 
 
 def _on_tpu() -> bool:
@@ -28,6 +34,157 @@ def pack_bitmask(ids_per_row: list[np.ndarray] | np.ndarray, num_v: int) -> np.n
         ids = np.asarray(ids, dtype=np.int64)
         np.bitwise_or.at(out[r], ids // 32, np.uint32(1) << (ids % 32).astype(np.uint32))
     return out.view(np.int32)
+
+
+def _gather_row_cols(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    rows: np.ndarray | None,
+) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    """Gather the CSR edge array in (optionally permuted) row order.
+
+    Returns (n, lens, row_ids, cols): per-edge destination row ids and V
+    columns, fully vectorized — the global position of edge e is
+    start-of-its-row + offset-within-row.
+    """
+    indptr = np.asarray(indptr, dtype=np.int64)
+    indices = np.asarray(indices, dtype=np.int64)
+    if rows is None:
+        n = indptr.shape[0] - 1
+        lens = np.diff(indptr)
+        cols = indices
+    else:
+        rows = np.asarray(rows, dtype=np.int64)
+        n = rows.shape[0]
+        lens = indptr[rows + 1] - indptr[rows]
+        total = int(lens.sum())
+        ends = np.cumsum(lens)
+        offs = np.arange(total, dtype=np.int64) - np.repeat(ends - lens, lens)
+        cols = indices[np.repeat(indptr[rows], lens) + offs]
+    row_ids = np.repeat(np.arange(n, dtype=np.int64), lens)
+    return n, lens, row_ids, cols
+
+
+def pack_bitmask_csr(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    num_v: int,
+    rows: np.ndarray | None = None,
+) -> np.ndarray:
+    """Vectorized CSR → (rows, ceil(num_v/32)) int32 bitmask packing.
+
+    Equivalent to ``pack_bitmask([indices[indptr[r]:indptr[r+1]] for r in
+    rows], num_v)`` but with zero Python-level per-row work: one gather over
+    the whole edge array plus one fused ``bitwise_or.at`` scatter.
+
+    ``rows`` optionally selects/permutes rows (e.g. the random vertex order
+    of the blocked partitioner); ``None`` packs all rows in CSR order.
+    """
+    n, _, row_ids, cols = _gather_row_cols(indptr, indices, rows)
+    W = (num_v + 31) // 32
+    out = np.zeros(n * W, dtype=np.uint32)
+    np.bitwise_or.at(
+        out,
+        row_ids * W + (cols >> 5),
+        (np.int64(1) << (cols & 31)).astype(np.uint32),
+    )
+    return out.reshape(n, W).view(np.int32)
+
+
+def pack_bitmask_csr_sparse(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    num_v: int,
+    rows: np.ndarray | None = None,
+    cap: int = 48,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, int, int]:
+    """Sparse fused packing: the bitmask as (distinct flat word index, word
+    value) pairs plus per-row compact word lists, in one sorted pass.
+
+    One argsort over (row, word) keys yields both representations without
+    ever touching a dense (n, W) array — the caller chooses where (and
+    whether) to densify: ``pack_bitmask_csr_compact`` scatters on the host,
+    while ``blocked_partition_u`` never densifies globally at all — it
+    ships only the compact lists (plus the truncated rows' full masks,
+    built from (uniq, wordvals)) and rebuilds each block's (B, W) bitmask
+    on device inside the scan.
+
+    Returns (uniq (nnz,) int64 flat indices into the (n, W) mask,
+    wordvals (nnz,) int32, widx (n, cap) int32, vals (n, cap) int32,
+    truncated (n,) bool, n, W).
+    """
+    n, _, row_ids, cols = _gather_row_cols(indptr, indices, rows)
+    W = (num_v + 31) // 32
+    widx = np.zeros((n, cap), dtype=np.int32)
+    vals = np.zeros((n, cap), dtype=np.uint32)
+    if cols.size == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int32), widx,
+                vals.view(np.int32), np.zeros(n, bool), n, W)
+    fw = row_ids * W + (cols >> 5)            # flat (row, word) key per edge
+    bit = (np.int64(1) << (cols & 31)).astype(np.uint32)
+    srt = np.argsort(fw, kind="stable")
+    fs, bs = fw[srt], bit[srt]
+    boundary = np.empty(fs.size, bool)
+    boundary[0] = True
+    np.not_equal(fs[1:], fs[:-1], out=boundary[1:])
+    first = np.flatnonzero(boundary)
+    uniq = fs[first]                          # distinct (row, word), sorted
+    acc = np.bitwise_or.reduceat(bs, first)   # the word values
+    r = uniq // W
+    counts = np.bincount(r, minlength=n)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(uniq.size, dtype=np.int64) - starts[r]
+    keep = pos < cap
+    flat = r[keep] * cap + pos[keep]
+    widx.reshape(-1)[flat] = (uniq[keep] % W).astype(np.int32)
+    vals.reshape(-1)[flat] = acc[keep]
+    return (uniq, acc.view(np.int32), widx, vals.view(np.int32),
+            counts > cap, n, W)
+
+
+def pack_bitmask_csr_compact(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    num_v: int,
+    rows: np.ndarray | None = None,
+    cap: int = 48,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Fused ``pack_bitmask_csr`` + ``compact_row_words`` in one sorted pass.
+
+    Returns (masks (n, W) int32, widx (n, cap) int32, vals (n, cap) int32,
+    truncated (n,) bool), matching the two-step reference exactly.
+    """
+    uniq, wordvals, widx, vals, trunc, n, W = pack_bitmask_csr_sparse(
+        indptr, indices, num_v, rows=rows, cap=cap)
+    masks = np.zeros(n * W, dtype=np.int32)
+    masks[uniq] = wordvals
+    return masks.reshape(n, W), widx, vals, trunc
+
+
+def compact_row_words(
+    masks: np.ndarray, cap: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-row compact word lists of a packed (N, W) bitmask.
+
+    Returns (widx (N, cap) int32, vals (N, cap) int32, truncated (N,) bool).
+    Rows with ≤ cap nonzero words are represented exactly: for any mask X,
+    Σ_d popcount(vals[r, d] & X[widx[r, d]]) == popcount(masks[r] & X).
+    Rows with more nonzero words keep their first ``cap`` words and are
+    flagged in ``truncated`` so callers can fall back to the dense mask.
+    Padding slots point at word 0 with value 0 (safe to gather, adds 0).
+    """
+    n = masks.shape[0]
+    r, c = np.nonzero(masks)
+    counts = np.bincount(r, minlength=n)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(r.size, dtype=np.int64) - starts[r]
+    keep = pos < cap
+    widx = np.zeros((n, cap), dtype=np.int32)
+    vals = np.zeros((n, cap), dtype=np.int32)
+    flat = r[keep] * cap + pos[keep]
+    widx.reshape(-1)[flat] = c[keep]
+    vals.reshape(-1)[flat] = masks[r[keep], c[keep]]
+    return widx, vals, counts > cap
 
 
 def parsa_cost(
@@ -58,3 +215,55 @@ def parsa_cost(
     s_p = jnp.pad(s_masks, [(0, 0), (0, pw)])
     out = parsa_cost_kernel(nbr_p, s_p, bu=bu_, bw=bw_, interpret=interpret)
     return out[:U]
+
+
+def parsa_cost_select(
+    nbr_masks: jax.Array,   # (B, W) int32 packed N(u)
+    s_masks: jax.Array,     # (k, W) int32 packed S_i
+    retired: jax.Array,     # (B,) bool — rows excluded from selection
+    *,
+    order: jax.Array | None = None,    # (k,) int32 → greedy-round mode
+    enabled: jax.Array | None = None,  # (k,) bool slot gate (greedy mode)
+    bw: int = 512,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused cost+select: reduce the (B, k) cost tile to per-partition
+    (min, argmin) without materializing it outside VMEM.
+
+    Independent mode (``order is None``) returns ((k,) mins, (k,) argmins)
+    over unretired rows, ties to the lowest row.  Greedy mode visits columns
+    in ``order`` with progressive retirement (one balanced greedy round) and
+    returns ((k,) u_sel, (k,) c_sel) with u_sel = -1 / c_sel = BIG for
+    inactive slots.  Bit-exact vs the ``ref.py`` oracles.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, W = nbr_masks.shape
+    k = s_masks.shape[0]
+    greedy = order is not None
+    if enabled is None:
+        enabled = jnp.ones((k,), bool)
+    if not use_kernel:
+        if greedy:
+            return parsa_select_greedy_ref(nbr_masks, s_masks, retired,
+                                           order, enabled)
+        return parsa_select_ref(nbr_masks, s_masks, retired)
+    bw_ = min(bw, max(128, 128 * ((W + 127) // 128)))
+    pb = (-B) % 8
+    pw = (-W) % bw_
+    nbr_p = jnp.pad(nbr_masks, [(0, pb), (0, pw)])
+    s_p = jnp.pad(s_masks, [(0, 0), (0, pw)])
+    # padded rows are born retired so they never win a selection
+    ret_p = jnp.pad(retired, [(0, pb)], constant_values=True)
+    if greedy:
+        order_in = order.astype(jnp.int32)[None, :]
+    else:
+        order_in = jnp.arange(k, dtype=jnp.int32)[None, :]
+    enabled_in = enabled.astype(jnp.int32)[None, :]
+    u_sel, c_sel = parsa_select_kernel(
+        nbr_p, s_p, ret_p.astype(jnp.int32)[:, None], order_in, enabled_in,
+        greedy=greedy, bw=bw_, interpret=interpret)
+    if greedy:
+        return u_sel[0], c_sel[0]
+    return c_sel[0], u_sel[0]  # independent mode: (mins, argmins)

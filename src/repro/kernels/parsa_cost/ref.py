@@ -1,14 +1,112 @@
-r"""Pure-jnp oracle for the parsa_cost kernel.
+r"""Pure-jnp oracles for the parsa_cost / parsa_select kernels.
 
 cost[u, i] = |N(u) \ S_i| = Σ_w popcount(nbr[u, w] & ~s[i, w])
+
+The *select* oracles fuse the cost tile with the greedy reduction the
+blocked partitioner needs: per-partition (min, argmin) over the block's
+unretired vertices.  Two flavours:
+
+  * ``parsa_select_ref`` — independent per-partition reduction (each column
+    reduced in isolation; retired rows masked to BIG).
+  * ``parsa_select_greedy_ref`` — one greedy *round*: columns are visited in
+    ``order``; each pick retires its vertex before the next column is
+    reduced, so the k selections are distinct.  This is exactly one round of
+    the perfectly-balanced greedy loop in ``jax_partition._assign_block``.
+
+Both are bit-exact integer programs — the Pallas kernel in ``select.py``
+must match them exactly (tested in interpret mode).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+BIG = 2**30  # sentinel cost for retired / padded vertices (fits int32)
+
 
 def parsa_cost_ref(nbr_masks: jax.Array, s_masks: jax.Array) -> jax.Array:
     """nbr_masks (U, W) int32 bit-packs, s_masks (K, W) int32 → (U, K) int32."""
     masked = nbr_masks[:, None, :] & ~s_masks[None, :, :]
     return jax.lax.population_count(masked).astype(jnp.int32).sum(axis=-1)
+
+
+def select_from_cost(cost: jax.Array, retired: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Independent per-column (min, argmin) of a (B, k) tile, retired→BIG.
+
+    Ties resolve to the lowest row index (jnp.argmin semantics).
+    """
+    masked = jnp.where(retired[:, None], BIG, cost)
+    mins = jnp.min(masked, axis=0).astype(jnp.int32)
+    argmins = jnp.argmin(masked, axis=0).astype(jnp.int32)
+    return mins, argmins
+
+
+def select_greedy_from_cost(
+    cost: jax.Array,             # (B, k) int32 — current cost tile
+    retired: jax.Array,          # (B,) bool — already-assigned / padded rows
+    order: jax.Array | None,     # (k,) int32 column visit order; None = 0..k-1
+    enabled: jax.Array,          # (k,) bool — whether slot j may pick this round
+) -> tuple[jax.Array, jax.Array]:
+    """One greedy round over a cost tile: progressive-retirement selection.
+
+    Returns (u_sel, c_sel), both (k,): slot j picked vertex u_sel[j] for
+    partition order[j] at cost c_sel[j].  Inactive slots (disabled, or no
+    unretired vertex left) return u_sel = -1, c_sel = BIG.
+
+    Semantics are strictly sequential (slot j sees the retirements of slots
+    < j), but the common case is computed in one vectorized pass: every
+    slot's candidate is its column's masked argmin, and a slot's candidate
+    only differs from its sequential pick if an *earlier slot grabs the
+    same vertex*.  So when all active candidates are pairwise distinct —
+    the overwhelmingly common case once the S_i differentiate — the
+    one-pass result IS the sequential result.  Only on a collision does a
+    ``lax.cond`` fall back to the scalar per-slot loop (which costs ~k
+    small ops, but runs for a tiny fraction of rounds, e.g. the very first
+    rounds where all partitions still have identical costs).
+    """
+    B, k = cost.shape
+    iota_b = jnp.arange(B, dtype=jnp.int32)
+    cols = cost if order is None else cost[:, order]  # (B, k) — slot j's column
+
+    masked = jnp.where(retired[:, None], BIG, cols)            # (B, k)
+    m = jnp.min(masked, axis=0)
+    a = jnp.argmin(masked, axis=0).astype(jnp.int32)           # first row
+    act = enabled & (m < BIG)                                  # (k,)
+    pick = jnp.where(act, a, -1)
+    same = (pick[None, :] == pick[:, None]) & act[None, :] & act[:, None]
+    collide = jnp.triu(same, 1).any()
+
+    def fast(_):
+        return pick, jnp.where(act, m, BIG)
+
+    def slow(_):
+        def body(j, carry):
+            u_sel, c_sel, ret = carry
+            c = jax.lax.dynamic_slice_in_dim(cols, j, 1, 1)[:, 0]  # (B,)
+            c = jnp.where(ret, BIG, c)
+            mj = jnp.min(c)
+            uj = jnp.argmin(c).astype(jnp.int32)
+            actj = enabled[j] & (mj < BIG)
+            ret = ret | ((iota_b == uj) & actj)
+            u_sel = u_sel.at[j].set(jnp.where(actj, uj, -1))
+            c_sel = c_sel.at[j].set(jnp.where(actj, mj, BIG))
+            return u_sel, c_sel, ret
+
+        u0 = jnp.full((k,), -1, jnp.int32)
+        c0 = jnp.full((k,), BIG, jnp.int32)
+        u_sel, c_sel, _ = jax.lax.fori_loop(0, k, body, (u0, c0, retired),
+                                            unroll=True)
+        return u_sel, c_sel
+
+    return jax.lax.cond(collide, slow, fast, None)
+
+
+def parsa_select_ref(nbr_masks, s_masks, retired):
+    """Fused cost+select oracle, independent mode → ((k,) mins, (k,) argmins)."""
+    return select_from_cost(parsa_cost_ref(nbr_masks, s_masks), retired)
+
+
+def parsa_select_greedy_ref(nbr_masks, s_masks, retired, order, enabled):
+    """Fused cost+select oracle, greedy-round mode → ((k,) u_sel, (k,) c_sel)."""
+    return select_greedy_from_cost(
+        parsa_cost_ref(nbr_masks, s_masks), retired, order, enabled)

@@ -1,0 +1,147 @@
+r"""Pallas TPU kernel: fused Parsa cost + select over packed bitmasks.
+
+The blocked greedy partitioner (``jax_partition._assign_block_rounds``) never
+needs the full (B × k) cost tile in HBM — per round it only needs, for every
+partition i, the cheapest unassigned vertex of the block:
+
+    cost[u, i] = Σ_w popcount(nbr[u, w] & ~s[i, w])
+    (min_i, argmin_i) = min/argmin over unretired u of cost[u, i]
+
+This kernel computes the tile *and* the reduction in one pass: the (B, k)
+partials accumulate in a VMEM scratch across the W grid axis, and the final
+grid step reduces them to two (1, k) outputs.  The tile never leaves VMEM,
+so B=1024 blocks cost 4·B·k bytes of scratch instead of an HBM round-trip —
+that is what lets the greedy path scale past B=256.
+
+Two selection modes (static switch):
+
+  * independent — each column reduced in isolation over unretired rows
+    (retired→BIG); ties take the lowest row index.
+  * greedy — one *round* of the perfectly-balanced greedy loop: columns are
+    visited in ``order``; each active pick retires its row before the next
+    column is reduced, so the k picks are distinct.  Slots that are disabled
+    or find no unretired row return (u=-1, c=BIG).
+
+VMEM budget per step (B=1024, bw=512, k≤64):
+    nbr tile  1024×512×4 = 2 MiB
+    s tile      64×512×4 = 128 KiB
+    acc       1024×64×4  = 256 KiB
+    per-k temp 1024×512×4 = 2 MiB  (inside the unrolled k loop)
+  ≈ 4.4 MiB — inside the ~16 MiB VMEM of a v5e core.  bw is a multiple of
+  128 (lane width); B a multiple of 8 (int32 sublane).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import BIG
+
+
+def _select_kernel(nbr_ref, s_ref, retired_ref, order_ref, enabled_ref,
+                   umin_ref, cmin_ref, acc_ref, *, greedy: bool):
+    w_idx = pl.program_id(0)
+    nw = pl.num_programs(0)
+    k = s_ref.shape[0]
+    B = nbr_ref.shape[0]
+
+    @pl.when(w_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nbr = nbr_ref[...]  # (B, bw) int32
+
+    def accum(i, _):
+        s_row = s_ref[i, :]  # (bw,) int32
+        masked = nbr & ~s_row[None, :]
+        partial = jax.lax.population_count(masked).astype(jnp.int32).sum(axis=1)
+        acc_ref[:, i] += partial
+        return _
+
+    jax.lax.fori_loop(0, k, accum, None, unroll=True)
+
+    @pl.when(w_idx == nw - 1)
+    def _reduce():
+        cost = acc_ref[...]                                  # (B, k)
+        ret = retired_ref[...] != 0                          # (B, 1)
+        iota_b = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+        if not greedy:
+            masked = jnp.where(ret, BIG, cost)               # (B, k)
+            mins = jnp.min(masked, axis=0)                   # (k,)
+            # first-occurrence argmin via the iota-min trick
+            hit = masked == mins[None, :]
+            argmins = jnp.min(jnp.where(hit, iota_b, B), axis=0)
+            cmin_ref[...] = mins[None, :]
+            umin_ref[...] = argmins[None, :]
+        else:
+            order = order_ref[...]      # (1, k) int32
+            enabled = enabled_ref[...]  # (1, k) int32
+
+            def pick(j, carry):
+                u_sel, c_sel, ret = carry                    # (1,k),(1,k),(B,1)
+                col = jax.lax.dynamic_index_in_dim(
+                    order, j, 1, keepdims=False)[0]
+                c = jax.lax.dynamic_slice(cost, (0, col), (B, 1))
+                c = jnp.where(ret, BIG, c)                   # (B, 1)
+                m = jnp.min(c)
+                u = jnp.min(jnp.where(c == m, iota_b, B))    # first min row
+                en = jax.lax.dynamic_index_in_dim(
+                    enabled, j, 1, keepdims=False)[0] != 0
+                act = en & (m < BIG)
+                ret = ret | ((iota_b == u) & act)
+                iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+                u_sel = jnp.where(iota_k == j, jnp.where(act, u, -1), u_sel)
+                c_sel = jnp.where(iota_k == j, jnp.where(act, m, BIG), c_sel)
+                return u_sel, c_sel, ret
+
+            u0 = jnp.full((1, k), -1, jnp.int32)
+            c0 = jnp.full((1, k), BIG, jnp.int32)
+            u_sel, c_sel, _ = jax.lax.fori_loop(0, k, pick, (u0, c0, ret),
+                                                unroll=True)
+            umin_ref[...] = u_sel
+            cmin_ref[...] = c_sel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("greedy", "bw", "interpret"))
+def parsa_select_kernel(
+    nbr_masks: jax.Array,  # (B, W) int32, B % 8 == 0, W % bw == 0
+    s_masks: jax.Array,    # (k, W) int32
+    retired: jax.Array,    # (B, 1) int32 (0/1)
+    order: jax.Array,      # (1, k) int32 column visit order (greedy mode)
+    enabled: jax.Array,    # (1, k) int32 slot gate (greedy mode)
+    *,
+    greedy: bool,
+    bw: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (u_sel (1, k), c_sel (1, k)) int32 — see module docstring."""
+    B, W = nbr_masks.shape
+    k = s_masks.shape[0]
+    grid = (W // bw,)
+    umin, cmin = pl.pallas_call(
+        functools.partial(_select_kernel, greedy=greedy),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bw), lambda w: (0, w)),
+            pl.BlockSpec((k, bw), lambda w: (0, w)),
+            pl.BlockSpec((B, 1), lambda w: (0, 0)),
+            pl.BlockSpec((1, k), lambda w: (0, 0)),
+            pl.BlockSpec((1, k), lambda w: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda w: (0, 0)),
+            pl.BlockSpec((1, k), lambda w: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((B, k), jnp.int32)],
+        interpret=interpret,
+    )(nbr_masks, s_masks, retired, order, enabled)
+    return umin, cmin

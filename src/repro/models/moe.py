@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 from .layers import _dense_init
 from .shardctx import constrain, current_rules

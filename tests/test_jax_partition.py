@@ -1,0 +1,278 @@
+"""Device-resident blocked-Parsa pipeline: packing property tests, fused
+cost+select kernel exactness, and single-dispatch scan parity vs the
+sequential per-block host loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bipartite import from_edges
+from repro.core.jax_partition import (
+    DISPATCH_COUNTS,
+    blocked_partition_u,
+    blocked_partition_u_hostloop,
+    pack_graph_blocks,
+    shard_parsa_step,
+)
+from repro.graphs import text_like
+from repro.kernels.parsa_cost import (
+    BIG,
+    compact_row_words,
+    pack_bitmask,
+    pack_bitmask_csr,
+    pack_bitmask_csr_compact,
+    parsa_cost_select,
+    parsa_select_greedy_ref,
+    parsa_select_ref,
+)
+
+
+def _random_graph(seed, nu=None, nv=None, ne=None):
+    rng = np.random.default_rng(seed)
+    nu = nu or int(rng.integers(50, 900))
+    nv = nv or int(rng.integers(30, 400))
+    ne = ne or int(rng.integers(1, 6000))
+    return from_edges(nu, nv, rng.integers(0, nu, ne), rng.integers(0, nv, ne))
+
+
+# ------------------------------------------------------------------ packing
+@pytest.mark.parametrize("seed", range(6))
+def test_vectorized_packing_matches_pack_bitmask(seed):
+    """Property: CSR→bitmask with zero per-vertex Python work is exact."""
+    g = _random_graph(seed)
+    rng = np.random.default_rng(seed + 100)
+    want = pack_bitmask([g.neighbors(int(u)) for u in range(g.num_u)], g.num_v)
+    assert np.array_equal(
+        pack_bitmask_csr(g.u_indptr, g.u_indices, g.num_v), want)
+    perm = rng.permutation(g.num_u)
+    want_p = pack_bitmask([g.neighbors(int(u)) for u in perm], g.num_v)
+    assert np.array_equal(
+        pack_bitmask_csr(g.u_indptr, g.u_indices, g.num_v, rows=perm), want_p)
+    # the fused sorted-pass variant agrees with the two-step reference
+    cap = int(rng.integers(2, 12))
+    m2, w2, v2, t2 = pack_bitmask_csr_compact(
+        g.u_indptr, g.u_indices, g.num_v, rows=perm, cap=cap)
+    w1, v1, t1 = compact_row_words(want_p, cap)
+    assert np.array_equal(m2, want_p)
+    assert np.array_equal(w2, w1) and np.array_equal(v2, v1)
+    assert np.array_equal(t2, t1)
+
+
+def test_compact_row_words_identity():
+    """Σ_d popcount(vals & X[widx]) == popcount(mask & X) for clean rows."""
+    g = text_like(200, 600, mean_len=25, seed=2)
+    masks = pack_bitmask_csr(g.u_indptr, g.u_indices, g.num_v)
+    widx, vals, trunc = compact_row_words(masks, cap=8)
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 2**32, masks.shape[1], dtype=np.uint64).astype(np.uint32)
+    mu, vu = masks.view(np.uint32), vals.view(np.uint32)
+    for r in range(masks.shape[0]):
+        if trunc[r]:
+            continue
+        full = int(sum(bin(x).count("1") for x in (mu[r] & X)))
+        comp = int(sum(bin(int(v & X[i])).count("1")
+                       for i, v in zip(widx[r], vu[r])))
+        assert full == comp
+
+
+def test_pack_graph_blocks_shapes_and_trunc_side_channel():
+    g = text_like(700, 900, mean_len=30, seed=4)
+    packed = pack_graph_blocks(g, 256, cap=4)  # tiny cap → lots of trunc
+    nb = -(-g.num_u // 256)
+    assert packed.valid.shape == (nb, 256)
+    assert packed.valid.sum() == g.num_u
+    assert packed.trunc.any()  # cap=4 must truncate on this graph
+    # every truncated row appears exactly once in the side channel
+    t_total = int(packed.trunc.sum())
+    assert int((packed.tr_ids < 256).sum()) == t_total
+
+
+# ------------------------------------------------- fused cost+select kernel
+@pytest.mark.parametrize("B", [256, 1024])
+@pytest.mark.parametrize("k", [8, 32, 64])
+def test_select_kernel_bit_exact_vs_ref(B, k):
+    """Acceptance: fused kernel matches ref.py bit-exactly (interpret)."""
+    rng = np.random.default_rng(B * k)
+    num_v = int(rng.integers(100, 3000))
+    nbr = jnp.asarray(pack_bitmask(
+        [rng.choice(num_v, size=rng.integers(0, min(60, num_v)),
+                    replace=False) for _ in range(B)], num_v))
+    s = jnp.asarray(pack_bitmask(rng.random((k, num_v)) < 0.25, num_v))
+    retired = jnp.asarray(rng.random(B) < 0.3)
+    # independent mode: per-partition (min, argmin)
+    m1, a1 = parsa_cost_select(nbr, s, retired, use_kernel=True,
+                               interpret=True)
+    m2, a2 = parsa_select_ref(nbr, s, retired)
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    # greedy-round mode: progressive retirement in `order`
+    order = jnp.asarray(rng.permutation(k).astype(np.int32))
+    enabled = jnp.asarray(rng.random(k) < 0.8)
+    u1, c1 = parsa_cost_select(nbr, s, retired, order=order, enabled=enabled,
+                               use_kernel=True, interpret=True)
+    u2, c2 = parsa_select_greedy_ref(nbr, s, retired, order, enabled)
+    assert np.array_equal(np.asarray(u1), np.asarray(u2))
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_select_kernel_conflict_chain():
+    """All-identical columns force the worst-case collision cascade."""
+    B, k, num_v = 128, 16, 500
+    rng = np.random.default_rng(7)
+    nbr = jnp.asarray(pack_bitmask(
+        [rng.choice(num_v, size=20, replace=False) for _ in range(B)], num_v))
+    s = jnp.zeros((k, (num_v + 31) // 32), jnp.int32)  # identical columns
+    retired = jnp.zeros((B,), bool)
+    order = jnp.arange(k, dtype=jnp.int32)
+    enabled = jnp.ones((k,), bool)
+    u1, c1 = parsa_cost_select(nbr, s, retired, order=order, enabled=enabled,
+                               use_kernel=True, interpret=True)
+    u2, c2 = parsa_select_greedy_ref(nbr, s, retired, order, enabled)
+    assert np.array_equal(np.asarray(u1), np.asarray(u2))
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+    assert len(set(np.asarray(u1).tolist())) == k  # distinct picks
+    assert (np.asarray(c1) < BIG).all()
+
+
+# ----------------------------------------------------- scan pipeline parity
+@pytest.mark.parametrize("seed,k,block", [
+    (0, 4, 128), (1, 16, 128), (2, 8, 256), (3, 16, 64), (4, 3, 100),
+])
+def test_scan_pipeline_matches_hostloop(seed, k, block):
+    """Acceptance: the single-dispatch scan returns identical parts_u to
+    the per-block host loop (seed implementation) on random graphs."""
+    g = _random_graph(seed)
+    want = blocked_partition_u_hostloop(g, k, block=block, use_kernel=False,
+                                        seed=seed)
+    got = blocked_partition_u(g, k, block=block, use_kernel=False, seed=seed)
+    assert np.array_equal(got, want)
+
+
+def test_scan_pipeline_matches_hostloop_kernel_path():
+    g = text_like(500, 800, mean_len=20, seed=9)
+    want = blocked_partition_u_hostloop(g, 8, block=128, use_kernel=False,
+                                        seed=0)
+    got = blocked_partition_u(g, 8, block=128, use_kernel=True,
+                              interpret=True, seed=0)
+    assert np.array_equal(got, want)
+
+
+def test_scan_pipeline_matches_hostloop_trunc_fallback():
+    """cap small enough that the dense fallbacks actually run."""
+    g = text_like(400, 600, mean_len=25, seed=5)
+    want = blocked_partition_u_hostloop(g, 4, block=128, use_kernel=False,
+                                        seed=0)
+    got = blocked_partition_u(g, 4, block=128, use_kernel=False, seed=0,
+                              cap=3)
+    assert np.array_equal(got, want)
+
+
+def test_scan_pipeline_matches_hostloop_init_sets():
+    g = text_like(300, 500, mean_len=15, seed=6)
+    rng = np.random.default_rng(1)
+    S0 = rng.random((8, g.num_v)) < 0.1
+    want = blocked_partition_u_hostloop(g, 8, block=128, init_sets=S0,
+                                        use_kernel=False, seed=2)
+    got = blocked_partition_u(g, 8, block=128, init_sets=S0,
+                              use_kernel=False, seed=2)
+    assert np.array_equal(got, want)
+
+
+def test_blocked_partition_balance_and_cover():
+    g = text_like(777, 700, mean_len=18, seed=3)
+    k = 8
+    parts = blocked_partition_u(g, k, block=128, use_kernel=False)
+    assert np.all(parts >= 0) and np.all(parts < k)
+    sizes = np.bincount(parts, minlength=k)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_single_dispatch_per_call(monkeypatch):
+    """Acceptance: O(1) XLA dispatches per partition call, regardless of
+    how many blocks the graph spans — the whole partition goes through
+    exactly one `_partition_scan` launch and never the per-block loop."""
+    import repro.core.jax_partition as jp
+
+    calls = []
+    real_scan = jp._partition_scan
+
+    def counting_scan(*args, **kwargs):
+        calls.append(1)
+        return real_scan(*args, **kwargs)
+
+    def no_per_block_dispatch(*args, **kwargs):
+        raise AssertionError("per-block host dispatch on the scan pipeline")
+
+    monkeypatch.setattr(jp, "_partition_scan", counting_scan)
+    monkeypatch.setattr(jp, "_assign_block", no_per_block_dispatch)
+    small = text_like(150, 300, mean_len=10, seed=0)   # 2 blocks @ 128
+    large = text_like(1500, 300, mean_len=10, seed=0)  # 12 blocks @ 128
+    for g in (small, large):
+        calls.clear()
+        before = DISPATCH_COUNTS["partition_scan"]
+        blocked_partition_u(g, 4, block=128, use_kernel=False)
+        assert calls == [1]  # one scan launch, independent of n_blocks
+        assert DISPATCH_COUNTS["partition_scan"] == before + 1
+
+
+# ------------------------------------------------------------- shard_parsa
+def test_shard_parsa_step_single_device():
+    """One Alg-4 round through shard_map on a 1-wide data axis."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    g = text_like(256, 400, mean_len=12, seed=8)
+    k, block = 4, 64
+    packed = pack_graph_blocks(g, block)
+    body = shard_parsa_step(k, axis="data", use_kernel=False)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    W = (g.num_v + 31) // 32
+    fn = shard_map(body, mesh=mesh, in_specs=(P(),) * 8,
+                   out_specs=(P(), P(), P()), check_vma=False)
+    parts, merged, sizes = fn(
+        jnp.asarray(packed.valid), jnp.asarray(packed.widx),
+        jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
+        jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
+        jnp.zeros((k, W), jnp.int32), jnp.zeros((k,), jnp.int32))
+    parts = np.asarray(parts).reshape(-1)[: g.num_u]
+    assert (parts >= 0).all()
+    sizes_np = np.bincount(parts, minlength=k)
+    assert sizes_np.max() - sizes_np.min() <= 1
+    assert np.array_equal(np.asarray(sizes), sizes_np)
+    # merged S_i == union of assigned vertices' neighborhoods
+    want = np.zeros((k, W), np.uint32)
+    for local, u in enumerate(packed.order):
+        i = parts[local]
+        nb = pack_bitmask([g.neighbors(int(u))], g.num_v).view(np.uint32)[0]
+        want[i] |= nb
+    assert np.array_equal(np.asarray(merged).view(np.uint32), want)
+
+
+@pytest.mark.parametrize("select", ["rounds", "seq"])
+def test_shard_parsa_step_padded_blocks(select):
+    """Ragged U-shards: padding rows must not leak into sizes or S."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    g = text_like(150, 300, mean_len=10, seed=3)  # 150 % 64 != 0 → padding
+    k, block = 4, 64
+    packed = pack_graph_blocks(g, block)
+    body = shard_parsa_step(k, axis="data", use_kernel=False, select=select)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    W = (g.num_v + 31) // 32
+    fn = shard_map(body, mesh=mesh, in_specs=(P(),) * 8,
+                   out_specs=(P(), P(), P()), check_vma=False)
+    parts, merged, sizes = fn(
+        jnp.asarray(packed.valid), jnp.asarray(packed.widx),
+        jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
+        jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
+        jnp.zeros((k, W), jnp.int32), jnp.zeros((k,), jnp.int32))
+    parts = np.asarray(parts).reshape(-1)
+    real, pad = parts[: g.num_u], parts[g.num_u:]
+    assert (real >= 0).all() and (pad == -1).all()
+    # sizes count exactly the real vertices — no phantom picks
+    assert int(np.asarray(sizes).sum()) == g.num_u
+    assert np.array_equal(np.asarray(sizes),
+                          np.bincount(real, minlength=k))

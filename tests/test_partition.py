@@ -1,7 +1,9 @@
 """Partitioner invariants (Algorithms 2 & 3) — property-based."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     evaluate, from_edges, need_matrix, partition_u, partition_v, random_parts,
