@@ -5,25 +5,28 @@ Wall-clock speedup cannot be measured on one core; we report the paper's
 plus the work-scaling model (each worker partitions b/W subgraphs)."""
 from __future__ import annotations
 
-from repro.core import ParallelParsa, global_initialization
+from repro.api import ParsaConfig, partition
+from repro.core import global_initialization
 
-from .common import datasets, emit, score, timed
+from .common import datasets, emit, score
 
 
 def run(scale: float = 0.6, k: int = 16, b: int = 32):
     rows = []
     g = datasets(scale)["ctr-like"]
+    # §4.4 global init computed ONCE and shared across worker counts
     S0 = global_initialization(g, k, sample_frac=0.01, seed=0)
     base_traffic = None
     for workers in (1, 2, 4, 8, 16):
-        pp = ParallelParsa(k, workers=workers, tau=None, seed=0)
-        rep, dt = timed(lambda: pp.run(g, b=b, init_sets=S0))
-        s = score(g, rep.parts_u, k)
+        cfg = ParsaConfig(k=k, backend="parallel_sim", blocks=b,
+                          workers=workers, tau=None, seed=0, refine_v=False)
+        res = partition(g, cfg, init_sets=S0)
+        s = score(g, res.parts_u, k)
         if base_traffic is None:
             base_traffic = s["traffic_max"]
         rows.append({
             "workers": workers,
-            "stale_pushes": rep.stale_pushes_missed,
+            "stale_pushes": res.traffic.stale_pushes_missed,
             "quality_vs_1worker_pct":
                 (s["traffic_max"] - base_traffic) / base_traffic * 100,
             "ideal_speedup": workers,

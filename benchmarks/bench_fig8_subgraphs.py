@@ -3,9 +3,9 @@ Reproduces: more init data ⇒ better quality; small subgraphs + init beat
 b=1; runtime grows with a."""
 from __future__ import annotations
 
-from repro.core import sequential_parsa
+from repro.api import ParsaConfig, partition
 
-from .common import datasets, emit, score, timed
+from .common import datasets, emit, score
 
 
 def run(scale: float = 0.6, k: int = 16):
@@ -16,8 +16,10 @@ def run(scale: float = 0.6, k: int = 16):
         for b in (1, 4, 16):
             for frac in (0.0, 0.5, 1.0, 2.0):      # a/b
                 a = int(b * frac)
-                parts, dt = timed(
-                    lambda: sequential_parsa(g, k, b=b, a=a, seed=0))
+                cfg = ParsaConfig(k=k, blocks=b, init_iters=a, seed=0,
+                                  refine_v=False)
+                res = partition(g, cfg)
+                parts, dt = res.parts_u, res.timings["partition_u"]
                 rows.append({"dataset": dname, "b": b, "init_frac": frac,
                              "a": a, "time_s": dt, **score(g, parts, k)})
     emit(rows, "fig8_subgraphs")

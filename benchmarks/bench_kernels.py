@@ -16,10 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jax_partition import (
-    blocked_partition_u,
-    blocked_partition_u_hostloop,
-)
+from repro.api import ParsaConfig, partition
 from repro.graphs import text_like
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.parsa_cost import (
@@ -43,29 +40,35 @@ def _bench(fn, *args, reps=3):
 
 
 def bench_partitioner(rows, n_u=100_000, num_v=65_536, k=16, block=256):
-    """Acceptance benchmark: ≥5x end-to-end on a 100k-vertex graph."""
+    """Acceptance benchmark: ≥5x end-to-end on a 100k-vertex graph.
+
+    Both pipelines run through ``repro.api.partition``; the timed quantity
+    is the facade's per-phase ``timings["partition_u"]`` (backend only —
+    no V-refinement or metrics in the measured region)."""
     g = text_like(n_u, num_v, mean_len=20, seed=0)
+    cfg_new = ParsaConfig(k=k, backend="device_scan", block_size=block,
+                          use_kernel=False, refine_v=False)
+    cfg_seed = cfg_new.replace(backend="host_blocked_oracle")
     # warm the jitted scan (compile) before timing end-to-end
-    blocked_partition_u(g, k, block=block, use_kernel=False)
-    t0 = time.time()
-    p_new = blocked_partition_u(g, k, block=block, use_kernel=False)
-    t_new = time.time() - t0
+    partition(g, cfg_new)
+    res_new = partition(g, cfg_new)
+    t_new = res_new.timings["partition_u"]
     # warm the seed's per-block traces cheaply: one full block plus the
     # ragged remainder shape so no compile lands inside the timed region
     warm_rows = block + (n_u % block or block)
-    blocked_partition_u_hostloop(g.subgraph_u(np.arange(warm_rows)), k,
-                                 block=block, use_kernel=False)
-    t0 = time.time()
-    p_seed = blocked_partition_u_hostloop(g, k, block=block,
-                                          use_kernel=False)
-    t_seed = time.time() - t0
-    assert np.array_equal(p_new, p_seed), "parity violation in benchmark"
+    partition(g.subgraph_u(np.arange(warm_rows)), cfg_seed)
+    res_seed = partition(g, cfg_seed)
+    t_seed = res_seed.timings["partition_u"]
+    assert np.array_equal(res_new.parts_u, res_seed.parts_u), \
+        "parity violation in benchmark"
     rows.append({"name": "blocked_partition_seed_hostloop",
                  "us_per_call": t_seed * 1e6,
-                 "derived": f"U={n_u},V={num_v},k={k},B={block}"})
+                 "derived": f"U={n_u},V={num_v},k={k},B={block}",
+                 "backend": cfg_seed.backend})
     rows.append({"name": "blocked_partition_device_scan",
                  "us_per_call": t_new * 1e6,
-                 "derived": f"speedup={t_seed / t_new:.2f}x,parity=exact"})
+                 "derived": f"speedup={t_seed / t_new:.2f}x,parity=exact",
+                 "backend": cfg_new.backend})
 
 
 def run(scale: float = 1.0, n_u: int | None = None, num_v: int | None = None):
@@ -80,21 +83,21 @@ def run(scale: float = 1.0, n_u: int | None = None, num_v: int | None = None):
     s = jnp.asarray(pack_bitmask(rng.random((K, nv)) < 0.2, nv))
     rows.append({"name": "parsa_cost_ref_jnp", "us_per_call":
                  _bench(lambda a, b: parsa_cost_ref(a, b), nbr, s),
-                 "derived": f"U={U},K={K},V={nv}"})
+                 "derived": f"U={U},K={K},V={nv}", "backend": "-"})
     rows.append({"name": "parsa_cost_pallas_interpret", "us_per_call":
                  _bench(lambda a, b: parsa_cost(a, b), nbr, s),
-                 "derived": "correctness-scale only"})
+                 "derived": "correctness-scale only", "backend": "-"})
     # fused cost+select: ref vs kernel(interpret)
     retired = jnp.zeros((U,), bool)
     rows.append({"name": "parsa_select_ref_jnp", "us_per_call":
                  _bench(lambda a, b, r: parsa_select_ref(a, b, r)[0],
                         nbr, s, retired),
-                 "derived": f"U={U},K={K},V={nv}"})
+                 "derived": f"U={U},K={K},V={nv}", "backend": "-"})
     rows.append({"name": "parsa_select_pallas_interpret", "us_per_call":
                  _bench(lambda a, b, r: parsa_cost_select(
                      a, b, r, use_kernel=True, interpret=True)[0],
                         nbr, s, retired),
-                 "derived": "correctness-scale only"})
+                 "derived": "correctness-scale only", "backend": "-"})
     # flash attention
     B, S, H, D = 1, 512, 4, 64
     q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
@@ -102,11 +105,11 @@ def run(scale: float = 1.0, n_u: int | None = None, num_v: int | None = None):
     v = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
     rows.append({"name": "attention_ref_jnp", "us_per_call":
                  _bench(lambda a, b, c: attention_ref(a, b, c), q, k, v),
-                 "derived": f"B={B},S={S},H={H},D={D}"})
+                 "derived": f"B={B},S={S},H={H},D={D}", "backend": "-"})
     rows.append({"name": "flash_attention_interpret", "us_per_call":
                  _bench(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
                         q, k, v),
-                 "derived": "correctness-scale only"})
+                 "derived": "correctness-scale only", "backend": "-"})
     # end-to-end blocked partitioner, seed vs device-resident pipeline
     bench_partitioner(rows, n_u=n_u, num_v=num_v)
     emit(rows, "kernels")

@@ -4,36 +4,44 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import sequential_parsa
-from repro.core.jax_partition import (
-    blocked_partition_u,
-    blocked_partition_u_hostloop,
-)
+from repro.api import ParsaConfig, partition
 
 from .baselines import powergraph_greedy, recursive_bisection
 from .common import datasets, emit, score, timed
 
 
+def _parsa(g, cfg):
+    """(parts, dt) with dt = the backend phase only — apples-to-apples with
+    the bare baseline partitioners."""
+    res = partition(g, cfg)
+    return res.parts_u, res.timings["partition_u"]
+
+
 def run(scale: float = 1.0, k: int = 16, trials: int = 3):
     rows = []
+    seq_cfg = ParsaConfig(k=k, backend="host", blocks=16, init_iters=16,
+                          seed=0, refine_v=False)
+    dev_cfg = ParsaConfig(k=k, backend="device_scan", block_size=256,
+                          use_kernel=False, refine_v=False)
+    oracle_cfg = dev_cfg.replace(backend="host_blocked_oracle")
     for dname, g in datasets(scale).items():
         # parsa-tpu-blocked (single-dispatch scan) and -hostloop (seed
         # per-block loop) return identical partitions — the table shows the
         # block-greedy quality delta vs sequential Alg 3 once, and the
         # runtime column shows the dispatch/packing speedup.
         methods = {
-            "parsa": lambda g=g: sequential_parsa(g, k, b=16, a=16, seed=0),
-            "parsa-tpu-blocked": lambda g=g: blocked_partition_u(
-                g, k, block=256, use_kernel=False),
-            "parsa-tpu-hostloop": lambda g=g: blocked_partition_u_hostloop(
-                g, k, block=256, use_kernel=False),
-            "powergraph": lambda g=g: powergraph_greedy(g, k, seed=0),
-            "bisection": lambda g=g: recursive_bisection(g, k, seed=0),
+            "parsa": lambda g=g: _parsa(g, seq_cfg),
+            "parsa-tpu-blocked": lambda g=g: _parsa(g, dev_cfg),
+            "parsa-tpu-hostloop": lambda g=g: _parsa(g, oracle_cfg),
+            "powergraph": lambda g=g: timed(
+                lambda: powergraph_greedy(g, k, seed=0)),
+            "bisection": lambda g=g: timed(
+                lambda: recursive_bisection(g, k, seed=0)),
         }
         for mname, fn in methods.items():
             scores, ts = [], []
             for t in range(trials if mname.startswith("parsa") else 1):
-                parts, dt = timed(fn)
+                parts, dt = fn()
                 scores.append(score(g, parts, k, seed=t))
                 ts.append(dt)
             agg = {kk: float(np.mean([s[kk] for s in scores]))

@@ -11,10 +11,8 @@ saving; Python wall-clock is not comparable to their C++, so the model
 prices both phases on the same hardware.)"""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import ParallelParsa, global_initialization, partition_v, random_parts
-from repro.core.costs import need_matrix
+from repro.api import ParsaConfig, partition
+from repro.core import random_parts
 from repro.graphs import ctr_like
 from repro.ml import DBPGConfig, PSCluster, make_problem
 
@@ -32,24 +30,27 @@ def run(k: int = 16, iters: int = 45, scale: float = 1.0):
     rows = []
 
     # Parsa partition (parallel, eventual consistency, global init — §5.4/5.5)
-    S0 = global_initialization(g, k, sample_frac=0.01, seed=0)
-    rep = ParallelParsa(k, workers=4, tau=None, seed=0).run(g, b=16, init_sets=S0)
-    pu_parsa = rep.parts_u
-    pv_parsa = partition_v(g, pu_parsa, k, sweeps=2)
+    parsa = partition(g, ParsaConfig(
+        k=k, backend="parallel_sim", blocks=16, workers=4, tau=None,
+        global_init_frac=0.01, seed=0, refine_v=True, sweeps=2))
     # model the partitioning phase on the same hardware
     part_compute = C_OPS * k * g.num_edges / (FLOPS_RATE * k)
-    part_comm = (rep.pushed_bytes + rep.pulled_bytes) / BANDWIDTH / k
+    part_comm = (parsa.traffic.pushed_bytes + parsa.traffic.pulled_bytes) \
+        / BANDWIDTH / k
     t_partition = part_compute + part_comm
 
     results = {}
     for method in ("random", "parsa"):
         if method == "parsa":
-            pu, pv, tp = pu_parsa, pv_parsa, t_partition
+            tp = t_partition
+            cl = PSCluster.from_partition(
+                g, labels, parsa, cfg,
+                flops_rate=FLOPS_RATE, bandwidth=BANDWIDTH, seed=1)
         else:
-            pu, pv, tp = (random_parts(g.num_u, k, 0),
-                          random_parts(g.num_v, k, 1), 0.0)
-        cl = PSCluster(g, labels, pu, pv, k, cfg,
-                       flops_rate=FLOPS_RATE, bandwidth=BANDWIDTH, seed=1)
+            tp = 0.0
+            cl = PSCluster(g, labels, random_parts(g.num_u, k, 0),
+                           random_parts(g.num_v, k, 1), k, cfg,
+                           flops_rate=FLOPS_RATE, bandwidth=BANDWIDTH, seed=1)
         res = cl.run(iters, log_every=iters - 1)
         results[method] = dict(res, t_partition=tp)
         rows.append({

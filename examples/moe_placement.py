@@ -2,6 +2,10 @@
 token-group × expert affinity graph from measured routing counts of a
 reduced deepseek-family model, then place experts to shrink the all-to-all.
 
+``build_expert_placement`` runs the partition through the unified
+``repro.api.partition()`` facade (host backend by default — pass
+``backend=`` to move it on-device).
+
     PYTHONPATH=src python examples/moe_placement.py
 """
 import jax

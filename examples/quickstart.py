@@ -1,13 +1,18 @@
-"""Quickstart: partition a synthetic doc×vocab graph with Parsa, inspect all
-three paper objectives, and compare to random placement.
+"""Quickstart: the whole Parsa pipeline is ONE call now.
+
+``repro.api.partition(graph, ParsaConfig(...))`` partitions U (Algorithm
+3/4), refines V (Algorithm 2), and measures all three paper objectives —
+returning a single ``PartitionResult``.  Swap the ``backend`` field to move
+the same workload between the sequential reference (``host``), the
+device-resident blocked scan (``device_scan``), and the simulated
+parameter-server run (``parallel_sim``); nothing else changes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (
-    evaluate, improvement, partition_v, random_parts, sequential_parsa,
-)
+from repro.api import ParsaConfig, partition
+from repro.core import evaluate, improvement, random_parts
 from repro.graphs import text_like
 
 k = 16
@@ -15,11 +20,12 @@ print("building a documents × vocabulary bipartite graph ...")
 g = text_like(num_docs=2000, vocab=6000, mean_len=50, seed=0)
 print(f"  |U|={g.num_u} docs  |V|={g.num_v} vocab  |E|={g.num_edges} edges")
 
-print(f"running Parsa (b=8 subgraphs, a=8 init iterations, k={k}) ...")
-parts_u = sequential_parsa(g, k, b=8, a=8, seed=0)
-parts_v = partition_v(g, parts_u, k, sweeps=2)
-m = evaluate(g, parts_u, parts_v, k)
+cfg = ParsaConfig(k=k, backend="host", blocks=8, init_iters=8, seed=0)
+print(f"running Parsa via repro.api.partition ({cfg.backend} backend, "
+      f"b={cfg.blocks} subgraphs, a={cfg.init_iters} init iterations, k={k}) ...")
+res = partition(g, cfg)   # one call: partition U, refine V, measure
 
+m = res.metrics
 mr = evaluate(g, random_parts(g.num_u, k, 0), random_parts(g.num_v, k, 1), k)
 
 print("\nobjective             parsa      random   improvement")
@@ -30,4 +36,16 @@ for name, a, b in [
     ("    total traffic  ", m.traffic_sum, mr.traffic_sum),
 ]:
     print(f"{name}  {a:8d}  {b:8d}   {improvement(b, a):6.0f}%")
-print("\n(improvement = (random − parsa)/parsa × 100%, as in the paper §5.1)")
+print("\n(improvement = (random − parsa)/parsa × 100%, as in the paper §5.1;")
+print(" the paper's CTR runs cut inter-machine traffic by >90%)")
+
+print("\nphase timings:",
+      {name: f"{dt * 1e3:.1f}ms" for name, dt in res.timings.items()})
+
+# warm-start / incremental repartitioning: tomorrow's graph reuses today's
+# neighbor sets with one method call (§4.4 incremental mode).
+g2 = text_like(num_docs=2000, vocab=6000, mean_len=50, seed=1)
+res2 = res.refine(g2)
+print(f"\nincremental repartition of a fresh graph via res.refine(): "
+      f"max traffic {res2.metrics.traffic_max} "
+      f"(cold: {partition(g2, cfg).metrics.traffic_max})")

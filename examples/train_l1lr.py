@@ -6,9 +6,8 @@ Parsa vs random placement, exact traffic metering + modeled wall-clock.
 """
 import argparse
 
-import numpy as np
-
-from repro.core import ParallelParsa, global_initialization, partition_v, random_parts
+from repro.api import ParsaConfig, partition
+from repro.core import random_parts
 from repro.graphs import ctr_like
 from repro.ml import DBPGConfig, PSCluster, make_problem
 
@@ -28,16 +27,17 @@ def main():
     print(f"  {g.num_u} examples × {g.num_v} features, {g.num_edges} nnz")
 
     print("Parsa-partitioning data + parameters (4 workers, τ=∞) ...")
-    S0 = global_initialization(g, k, sample_frac=0.01, seed=0)
-    rep = ParallelParsa(k, workers=4, tau=None, seed=0).run(g, b=8, init_sets=S0)
-    pv = partition_v(g, rep.parts_u, k, sweeps=2)
+    parsa = partition(g, ParsaConfig(
+        k=k, backend="parallel_sim", blocks=8, workers=4, tau=None,
+        global_init_frac=0.01, seed=0, refine_v=True, sweeps=2))
 
     cfg = DBPGConfig(lam=0.3, lr=0.005, max_delay=1)
-    for name, (pu_, pv_) in {
-        "random": (random_parts(g.num_u, k, 0), random_parts(g.num_v, k, 1)),
-        "parsa": (rep.parts_u, pv),
-    }.items():
-        cl = PSCluster(g, labels, pu_, pv_, k, cfg, seed=1)
+    for name in ("random", "parsa"):
+        if name == "parsa":
+            cl = PSCluster.from_partition(g, labels, parsa, cfg, seed=1)
+        else:
+            cl = PSCluster(g, labels, random_parts(g.num_u, k, 0),
+                           random_parts(g.num_v, k, 1), k, cfg, seed=1)
         res = cl.run(args.iters, log_every=max(args.iters // 5, 1))
         print(f"\n[{name}] after {args.iters} DBPG iterations:")
         print(f"  objective      : {res['objective'][0]:.1f} -> {res['objective'][-1]:.1f}")

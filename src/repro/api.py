@@ -1,0 +1,250 @@
+"""Public Parsa facade: one config, one ``partition()`` entry point, one
+result type.
+
+The paper's pipeline is one conceptual operation — partition U (Alg 3/4),
+refine V (Alg 2), place parameters, measure traffic — and this module is
+the one place it is exposed:
+
+    from repro.api import ParsaConfig, partition
+
+    cfg = ParsaConfig(k=16, backend="host", blocks=8, init_iters=8)
+    res = partition(graph, cfg)           # PartitionResult
+    res.parts_u, res.parts_v              # Alg 3 + Alg 2 assignments
+    res.metrics.traffic_max               # objectives (4)/(6)/(7)
+    res.timings["partition_u"]            # wall clock per phase
+    res2 = res.refine(tomorrows_graph)    # warm-start / incremental
+
+Backends (``host``, ``device_scan``, ``host_blocked_oracle``,
+``parallel_sim``) live in the registry in ``repro.api_backends``; add a
+strategy with ``@register_backend`` instead of a new module-level function.
+The five pre-facade entry points (``partition_u``, ``sequential_parsa``,
+``ParallelParsa.run``, ``blocked_partition_u``,
+``blocked_partition_u_hostloop``) remain as deprecation-warning shims that
+delegate here and return bit-identical results.
+
+``PartitionResult`` uniformly carries the final neighbor sets as packed
+bitmasks (``s_masks``, (k, ceil(|V|/32)) int32) with a lazy dense bool view
+(``neighbor_sets``), so host- and device-produced sets are interchangeable
+for warm starts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from .api_backends import (
+    BACKENDS,
+    BackendOutput,
+    TrafficCounters,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from .core.bipartite import BipartiteGraph
+from .core.costs import PartitionMetrics, evaluate
+from .core.partition_v import partition_v
+from .kernels.parsa_cost import pack_bitmask, unpack_bitmask
+
+if TYPE_CHECKING:  # avoid the placement ↔ api import cycle at runtime
+    from .core.placement import Placement
+
+__all__ = [
+    "ParsaConfig",
+    "PartitionResult",
+    "PartitionMetrics",
+    "TrafficCounters",
+    "partition",
+    "register_backend",
+    "available_backends",
+]
+
+_SELECTS = ("size", "footprint")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParsaConfig:
+    """Every knob of the Parsa pipeline, validated at construction.
+
+    Only ``k`` is required.  Fields group by the phase they drive; backends
+    ignore knobs that don't apply to them (e.g. ``workers`` outside
+    ``parallel_sim``).
+    """
+
+    k: int
+    backend: str = "host"
+
+    # ---- subgraph streaming (§4.2/§4.4) — host / parallel_sim backends
+    blocks: int = 1            # b: number of subgraphs (1 = global greedy)
+    init_iters: int = 0        # a: individual-initialization iterations
+    theta: int = 1000          # bucket-queue head-pointer range (§4.1)
+    select: str = "size"       # "size" (perfect balance) | "footprint"
+    seed: int = 0
+
+    # ---- device backend knobs (device_scan / host_blocked_oracle)
+    block_size: int = 256      # B: vertices greedily assigned per block
+    cap: int = 48              # compact word-list width per vertex
+    use_kernel: bool = False   # fused Pallas cost+select (TPU) vs jnp path
+    interpret: bool | None = None  # force Pallas interpret mode (CI)
+
+    # ---- simulated-parallel backend knobs (Alg 4)
+    workers: int = 4           # W concurrent workers
+    tau: int | None = 0        # max push delay in tasks; None = eventual
+    global_init_frac: float = 0.0  # §4.4 global-init sample fraction
+
+    # ---- composition
+    refine_v: bool = True      # run Alg 2 (partition_v) after partition_u
+    sweeps: int = 2            # Alg 2 re-assignment sweeps
+    placement: bool = False    # also derive an embedding Placement
+
+    def __post_init__(self):
+        if not isinstance(self.k, (int, np.integer)) or self.k <= 0:
+            raise ValueError(f"k must be a positive int, got {self.k!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown Parsa backend {self.backend!r}; available: "
+                f"{', '.join(available_backends())}")
+        if self.blocks < 1:
+            raise ValueError(f"blocks must be >= 1, got {self.blocks}")
+        if self.init_iters < 0:
+            raise ValueError(f"init_iters must be >= 0, got {self.init_iters}")
+        if self.select not in _SELECTS:
+            raise ValueError(f"select must be one of {_SELECTS}, got {self.select!r}")
+        if self.block_size <= 0 or self.block_size % 8 != 0:
+            raise ValueError(
+                f"block_size must be a positive multiple of 8 (sublane "
+                f"alignment of the fused select kernel), got {self.block_size}")
+        if self.cap <= 0:
+            raise ValueError(f"cap must be > 0, got {self.cap}")
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.tau is not None and self.tau < 0:
+            raise ValueError(f"tau must be >= 0 or None, got {self.tau}")
+        if not 0.0 <= self.global_init_frac <= 1.0:
+            raise ValueError(
+                f"global_init_frac must be in [0, 1], got {self.global_init_frac}")
+        if self.sweeps < 1:
+            raise ValueError(f"sweeps must be >= 1, got {self.sweeps}")
+        if self.placement and not self.refine_v:
+            raise ValueError("placement=True requires refine_v=True "
+                             "(the embedding layout needs parts_v)")
+
+    def replace(self, **changes) -> "ParsaConfig":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    """Uniform output of every backend.
+
+    The final neighbor sets are carried in whichever representation the
+    backend produced and converted lazily on first access: ``s_masks`` is
+    the packed int32 bitmask view (the device-native layout),
+    ``neighbor_sets`` the dense bool view of the same bits.
+    """
+
+    parts_u: np.ndarray                 # (|U|,) int32
+    parts_v: np.ndarray | None          # (|V|,) int32 or None (refine_v=False)
+    num_v: int
+    k: int
+    config: ParsaConfig
+    metrics: PartitionMetrics
+    timings: dict[str, float]           # seconds per phase + "total"
+    traffic: TrafficCounters | None = None   # parallel_sim only
+    placement: "Placement | None" = None     # config.placement only
+    _packed_sets: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _dense_sets: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self._packed_sets is None and self._dense_sets is None:
+            raise ValueError("PartitionResult needs packed or dense "
+                             "neighbor sets")
+
+    @property
+    def s_masks(self) -> np.ndarray:
+        """(k, ceil(|V|/32)) int32 — packed bitmask view, built on first use."""
+        if self._packed_sets is None:
+            self._packed_sets = np.asarray(pack_bitmask(
+                np.asarray(self._dense_sets, dtype=bool), self.num_v))
+        return self._packed_sets
+
+    @property
+    def neighbor_sets(self) -> np.ndarray:
+        """(k, |V|) bool — dense view of the neighbor sets, built on first use."""
+        if self._dense_sets is None:
+            self._dense_sets = unpack_bitmask(self._packed_sets, self.num_v)
+        return self._dense_sets
+
+    def refine(self, graph: BipartiteGraph,
+               config: ParsaConfig | None = None) -> "PartitionResult":
+        """Warm-start / incremental repartitioning: partition ``graph``
+        seeding the neighbor sets from this result (§4.4 incremental mode)
+        instead of hand-threading ``init_sets``."""
+        if graph.num_v != self.num_v:
+            raise ValueError(
+                f"refine() needs a graph over the same parameter side: "
+                f"result has num_v={self.num_v}, graph has "
+                f"num_v={graph.num_v}")
+        return partition(graph, config or self.config,
+                         init_sets=self.neighbor_sets)
+
+
+def partition(
+    graph: BipartiteGraph,
+    config: ParsaConfig,
+    *,
+    init_sets: np.ndarray | None = None,
+) -> PartitionResult:
+    """Run the full Parsa pipeline described by ``config`` on ``graph``.
+
+    Phases: backend partition_u → optional Alg 2 V-refinement → exact
+    metrics (objectives (4)/(6)/(7)) → optional embedding placement.  Each
+    phase's wall clock lands in ``result.timings``.  ``init_sets`` is the
+    internal warm-start hook — prefer ``PartitionResult.refine``.
+    """
+    backend = get_backend(config.backend)
+    timings: dict[str, float] = {}
+    t_start = time.perf_counter()
+
+    t0 = time.perf_counter()
+    out: BackendOutput = backend(graph, config, init_sets=init_sets)
+    timings["partition_u"] = time.perf_counter() - t0
+
+    parts_v = None
+    if config.refine_v:
+        t0 = time.perf_counter()
+        parts_v = partition_v(graph, out.parts_u, config.k, sweeps=config.sweeps)
+        timings["partition_v"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    metrics = evaluate(graph, out.parts_u, parts_v, config.k)
+    timings["metrics"] = time.perf_counter() - t0
+
+    placement = None
+    if config.placement:
+        from .core.placement import placement_from_parts  # lazy: cycle
+
+        t0 = time.perf_counter()
+        placement = placement_from_parts(out.parts_u, parts_v,
+                                         graph.num_v, config.k)
+        timings["placement"] = time.perf_counter() - t0
+
+    timings["total"] = time.perf_counter() - t_start
+
+    return PartitionResult(
+        parts_u=np.asarray(out.parts_u),
+        parts_v=parts_v,
+        num_v=graph.num_v,
+        k=config.k,
+        config=config,
+        metrics=metrics,
+        timings=timings,
+        traffic=out.traffic,
+        placement=placement,
+        _packed_sets=None if out.s_masks is None else np.asarray(out.s_masks),
+        _dense_sets=out.neighbor_sets,
+    )

@@ -1,0 +1,165 @@
+"""Backend registry for the ``repro.api`` Parsa facade.
+
+Every partitioning strategy in the repo is one registered backend with the
+uniform signature ``fn(graph, config, init_sets=None) -> BackendOutput``:
+
+  * ``host``                — Algorithm 3 (sequential reference); with
+    ``config.blocks > 1`` or ``config.init_iters > 0`` the §4.2/§4.4
+    subgraph-streaming driver (``sequential_parsa_impl``).
+  * ``device_scan``         — the device-resident blocked pipeline: one
+    jitted ``lax.scan`` over packed bitmask blocks, fused cost+select
+    (``blocked_partition_u_impl``).
+  * ``host_blocked_oracle`` — the seed per-block host loop, kept as the
+    parity oracle and benchmark baseline.
+  * ``parallel_sim``        — the deterministic Alg 4 parameter-server
+    simulation with W workers and bounded delay τ; the only backend that
+    fills ``BackendOutput.traffic``.
+
+New distributed strategies (e.g. randomized distributed submodular
+maximization, arXiv:1502.02606, or sparse-DNN partitioning workloads,
+arXiv:2104.11805) plug in as one more ``@register_backend`` function
+instead of another ad-hoc module-level entry point.
+
+This module is imported by ``repro.api`` and must not import it back —
+backends receive the (duck-typed) ``ParsaConfig`` and return plain
+``BackendOutput`` records; the facade owns result assembly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .core.bipartite import BipartiteGraph
+from .core.jax_partition import (
+    blocked_partition_u_hostloop_impl,
+    blocked_partition_u_impl,
+)
+from .core.parallel import global_initialization, parallel_parsa_impl
+from .core.partition_u import partition_u_impl
+from .core.subgraphs import sequential_parsa_impl
+
+__all__ = [
+    "BackendOutput",
+    "TrafficCounters",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "BACKENDS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficCounters:
+    """Parameter-server traffic of the partitioning run itself (Alg 4) —
+    previously exclusive to ``ParsaReport``."""
+
+    pushed_bytes: int = 0          # worker→server traffic (delta encoding)
+    pulled_bytes: int = 0          # server→worker traffic
+    tasks: int = 0
+    stale_pushes_missed: int = 0   # pushes invisible to a pull due to delay
+
+
+@dataclasses.dataclass
+class BackendOutput:
+    """What a backend hands back to the facade.
+
+    Exactly one of ``s_masks`` (packed (k, W) int32 bitmasks) or
+    ``neighbor_sets`` (dense (k, |V|) bool) must be set; the facade packs /
+    lazily unpacks the other view.
+    """
+
+    parts_u: np.ndarray
+    s_masks: np.ndarray | None = None
+    neighbor_sets: np.ndarray | None = None
+    traffic: TrafficCounters | None = None
+
+
+BackendFn = Callable[..., BackendOutput]
+BACKENDS: dict[str, BackendFn] = {}
+
+
+def register_backend(name: str) -> Callable[[BackendFn], BackendFn]:
+    """Decorator: register ``fn(graph, config, init_sets=None)`` under
+    ``name`` so ``ParsaConfig(backend=name)`` can reach it."""
+
+    def deco(fn: BackendFn) -> BackendFn:
+        BACKENDS[name] = fn
+        fn.backend_name = name  # type: ignore[attr-defined]
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown Parsa backend {name!r}; available: "
+            f"{', '.join(available_backends())}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(BACKENDS)
+
+
+# --------------------------------------------------------------------------
+# Registered adapters over the existing implementations.
+# --------------------------------------------------------------------------
+@register_backend("host")
+def host_backend(graph: BipartiteGraph, config, init_sets=None) -> BackendOutput:
+    """Sequential reference: Alg 3, optionally streamed over ``blocks``
+    subgraphs with ``init_iters`` individual-initialization passes."""
+    if config.blocks <= 1 and config.init_iters == 0:
+        res = partition_u_impl(
+            graph, config.k, init_sets=init_sets, theta=config.theta,
+            select=config.select, seed=config.seed)
+        return BackendOutput(res.parts_u, neighbor_sets=res.neighbor_sets)
+    parts_u, sets = sequential_parsa_impl(
+        graph, config.k, b=config.blocks, a=config.init_iters,
+        theta=config.theta, select=config.select, seed=config.seed,
+        init_sets=init_sets)
+    return BackendOutput(parts_u, neighbor_sets=sets)
+
+
+@register_backend("device_scan")
+def device_scan_backend(graph: BipartiteGraph, config, init_sets=None) -> BackendOutput:
+    """Device-resident blocked pipeline: one jitted scan, O(1) dispatches."""
+    parts_u, s_masks = blocked_partition_u_impl(
+        graph, config.k, block=config.block_size, init_sets=init_sets,
+        use_kernel=config.use_kernel, interpret=config.interpret,
+        seed=config.seed, cap=config.cap)
+    return BackendOutput(parts_u, s_masks=s_masks)
+
+
+@register_backend("host_blocked_oracle")
+def host_blocked_oracle_backend(graph: BipartiteGraph, config, init_sets=None) -> BackendOutput:
+    """Seed per-block host loop — the parity oracle for ``device_scan``."""
+    parts_u, s_masks = blocked_partition_u_hostloop_impl(
+        graph, config.k, block=config.block_size, init_sets=init_sets,
+        use_kernel=config.use_kernel, interpret=config.interpret,
+        seed=config.seed)
+    return BackendOutput(parts_u, s_masks=s_masks)
+
+
+@register_backend("parallel_sim")
+def parallel_sim_backend(graph: BipartiteGraph, config, init_sets=None) -> BackendOutput:
+    """Alg 4 parameter-server simulation (W workers, bounded delay τ).
+
+    With ``config.global_init_frac > 0`` and no explicit warm start, runs
+    §4.4 global initialization first and seeds every worker from it.
+    """
+    if init_sets is None and config.global_init_frac > 0:
+        init_sets = global_initialization(
+            graph, config.k, sample_frac=config.global_init_frac,
+            theta=config.theta, select=config.select, seed=config.seed)
+    report, sets = parallel_parsa_impl(
+        graph, config.k, b=config.blocks, a=config.init_iters,
+        workers=config.workers, tau=config.tau, theta=config.theta,
+        select=config.select, seed=config.seed, init_sets=init_sets)
+    traffic = TrafficCounters(
+        pushed_bytes=report.pushed_bytes, pulled_bytes=report.pulled_bytes,
+        tasks=report.tasks, stale_pushes_missed=report.stale_pushes_missed)
+    return BackendOutput(report.parts_u, neighbor_sets=sets, traffic=traffic)

@@ -22,10 +22,15 @@ The pipeline is fully device-resident:
    each block's (B, W) bitmask is rebuilt inside the scan by a 12K-element
    scatter-add (``_rebuild_nbr``).
 
-2. *One dispatch* — ``blocked_partition_u`` issues a single jitted
+2. *One dispatch* — ``blocked_partition_u_impl`` issues a single jitted
    ``jax.lax.scan`` over the block stack (``_partition_scan``) with the
    ``(S, sizes)`` carries donated, instead of one host dispatch per block.
-   ``DISPATCH_COUNTS`` records exactly one entry per partition call.
+   ``dispatch_counter()`` observes exactly one launch per partition call.
+
+This module's public names are deprecation shims over the ``repro.api``
+facade (backends ``device_scan`` / ``host_blocked_oracle``); the ``_impl``
+functions are the registered implementations and also return the final
+packed ``s_masks`` so the device path warm-starts with host-path parity.
 
 3. *Greedy rounds + fused select* — perfect balance makes the partition
    visit order deterministic: when partition sizes differ by at most one
@@ -56,7 +61,9 @@ union-push (server line 9), with τ == merge_every − 1 blocks of staleness.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -76,16 +83,51 @@ from .bipartite import BipartiteGraph
 __all__ = [
     "blocked_partition_u",
     "blocked_partition_u_hostloop",
+    "blocked_partition_u_impl",
+    "blocked_partition_u_hostloop_impl",
     "shard_parsa_step",
     "pack_graph_blocks",
     "PackedBlocks",
-    "DISPATCH_COUNTS",
+    "dispatch_counter",
+    "reset_dispatch_counts",
 ]
 
-# One entry per *host→device pipeline launch*; blocked_partition_u bumps it
-# exactly once per call regardless of graph size (O(1)-dispatch invariant,
-# asserted in tests/test_jax_partition.py).
-DISPATCH_COUNTS = {"partition_scan": 0}
+# Dispatch accounting: one entry per *host→device pipeline launch*;
+# blocked_partition_u_impl bumps it exactly once per call regardless of
+# graph size (O(1)-dispatch invariant, asserted in
+# tests/test_jax_partition.py).  Counts are observed through the
+# ``dispatch_counter()`` context manager so concurrent tests can't leak
+# counts into each other the way the old module-global dict did.
+_ACTIVE_COUNTERS: list[dict[str, int]] = []
+
+
+def _count_dispatch(name: str) -> None:
+    for counts in _ACTIVE_COUNTERS:
+        counts[name] = counts.get(name, 0) + 1
+
+
+@contextlib.contextmanager
+def dispatch_counter():
+    """Yield a fresh ``{"partition_scan": 0, ...}`` dict that records only
+    the pipeline launches issued inside this ``with`` block."""
+    counts: dict[str, int] = {"partition_scan": 0}
+    _ACTIVE_COUNTERS.append(counts)
+    try:
+        yield counts
+    finally:
+        # remove by identity: equal-valued dicts from nested scopes must not
+        # deregister each other
+        for i, c in enumerate(_ACTIVE_COUNTERS):
+            if c is counts:
+                del _ACTIVE_COUNTERS[i]
+                break
+
+
+def reset_dispatch_counts() -> None:
+    """Zero every active counter (test-isolation helper)."""
+    for counts in _ACTIVE_COUNTERS:
+        for key in counts:
+            counts[key] = 0
 
 
 class PackedBlocks(NamedTuple):
@@ -402,7 +444,7 @@ def _partition_scan(
     return parts, s_masks, sizes
 
 
-def blocked_partition_u(
+def blocked_partition_u_impl(
     graph: BipartiteGraph,
     k: int,
     block: int = 256,
@@ -411,14 +453,17 @@ def blocked_partition_u(
     interpret: bool | None = None,
     seed: int = 0,
     cap: int = 48,
-) -> np.ndarray:
-    """Device-resident blocked greedy partition.  Returns parts_u.
+) -> tuple[np.ndarray, np.ndarray]:
+    """Device-resident blocked greedy partition.
+    Returns (parts_u, final packed s_masks (k, W) int32).
 
     Packs the entire permuted U once (vectorized, compact word lists —
     ~cap words per vertex instead of W; the dense (B, W) bitmask of each
     block is rebuilt on device inside the scan, so a gigabyte-scale stack
     never exists on either side) and issues one jitted scan over the block
-    stack — O(1) XLA dispatches per call.
+    stack — O(1) XLA dispatches per call.  The final neighbor-set bitmasks
+    come back with the scan carry, so the device path supports warm-start /
+    incremental repartitioning with full parity to the host path.
     """
     W = (graph.num_v + 31) // 32
     if init_sets is None:
@@ -429,8 +474,8 @@ def blocked_partition_u(
     rng = np.random.default_rng(seed)
     order = rng.permutation(graph.num_u)
     packed = pack_graph_blocks(graph, block, order=order, cap=cap)
-    DISPATCH_COUNTS["partition_scan"] += 1
-    parts_blocks, _, _ = _partition_scan(
+    _count_dispatch("partition_scan")
+    parts_blocks, s_out, _ = _partition_scan(
         jnp.asarray(packed.valid), jnp.asarray(packed.widx),
         jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
         jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
@@ -439,10 +484,10 @@ def blocked_partition_u(
     flat = np.asarray(parts_blocks).reshape(-1)[: graph.num_u]
     parts = np.full(graph.num_u, -1, np.int32)
     parts[order] = flat
-    return parts
+    return parts, np.asarray(s_out)
 
 
-def blocked_partition_u_hostloop(
+def blocked_partition_u(
     graph: BipartiteGraph,
     k: int,
     block: int = 256,
@@ -450,10 +495,40 @@ def blocked_partition_u_hostloop(
     use_kernel: bool = True,
     interpret: bool | None = None,
     seed: int = 0,
-) -> np.ndarray:
+    cap: int = 48,
+    return_sets: bool = False,
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """Deprecated shim — use ``repro.api.partition`` with
+    ``backend="device_scan"``.  Returns parts_u (bit-identical to the
+    pre-facade output); with ``return_sets=True`` also the final packed
+    ``s_masks`` for warm-start parity with the host path."""
+    warnings.warn(
+        "blocked_partition_u is deprecated; use repro.api.partition(graph, "
+        "ParsaConfig(k=..., backend='device_scan', block_size=...))",
+        DeprecationWarning, stacklevel=2)
+    from ..api import ParsaConfig
+    from ..api_backends import get_backend
+
+    cfg = ParsaConfig(k=k, backend="device_scan", block_size=block,
+                      cap=cap, use_kernel=use_kernel, interpret=interpret,
+                      seed=seed, refine_v=False)
+    out = get_backend(cfg.backend)(graph, cfg, init_sets=init_sets)
+    return (out.parts_u, out.s_masks) if return_sets else out.parts_u
+
+
+def blocked_partition_u_hostloop_impl(
+    graph: BipartiteGraph,
+    k: int,
+    block: int = 256,
+    init_sets: np.ndarray | None = None,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
     """The seed implementation: per-block Python packing + one dispatch per
     block + per-vertex greedy.  Kept verbatim as the parity oracle and the
-    benchmark baseline for the single-dispatch pipeline."""
+    benchmark baseline for the single-dispatch pipeline.
+    Returns (parts_u, final packed s_masks)."""
     W = (graph.num_v + 31) // 32
     if init_sets is None:
         s_masks = jnp.zeros((k, W), jnp.int32)
@@ -471,7 +546,33 @@ def blocked_partition_u_hostloop(
             k=k, use_kernel=use_kernel, interpret=interpret,
         )
         parts[ids] = np.asarray(p)
-    return parts
+    return parts, np.asarray(s_masks)
+
+
+def blocked_partition_u_hostloop(
+    graph: BipartiteGraph,
+    k: int,
+    block: int = 256,
+    init_sets: np.ndarray | None = None,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    seed: int = 0,
+    return_sets: bool = False,
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """Deprecated shim — use ``repro.api.partition`` with
+    ``backend="host_blocked_oracle"``."""
+    warnings.warn(
+        "blocked_partition_u_hostloop is deprecated; use repro.api.partition("
+        "graph, ParsaConfig(k=..., backend='host_blocked_oracle'))",
+        DeprecationWarning, stacklevel=2)
+    from ..api import ParsaConfig
+    from ..api_backends import get_backend
+
+    cfg = ParsaConfig(k=k, backend="host_blocked_oracle", block_size=block,
+                      use_kernel=use_kernel, interpret=interpret, seed=seed,
+                      refine_v=False)
+    out = get_backend(cfg.backend)(graph, cfg, init_sets=init_sets)
+    return (out.parts_u, out.s_masks) if return_sets else out.parts_u
 
 
 def shard_parsa_step(k: int, axis: str = "data", use_kernel: bool = False,

@@ -15,8 +15,6 @@ import dataclasses
 import numpy as np
 
 from .bipartite import from_edges
-from .partition_u import partition_u
-from .partition_v import partition_v
 
 __all__ = ["ExpertPlacement", "build_expert_placement", "alltoall_traffic"]
 
@@ -33,12 +31,17 @@ def build_expert_placement(
     routing_counts: np.ndarray,  # (num_groups, num_experts) int — tokens routed
     k: int,
     seed: int = 0,
+    backend: str = "host",
 ) -> ExpertPlacement:
+    """Parsa-place experts via the ``repro.api`` facade (one call: U + V)."""
+    from ..api import ParsaConfig, partition  # lazy: core ↔ api
+
     groups, experts = routing_counts.shape
     gu, gv = np.nonzero(routing_counts)
     g = from_edges(groups, experts, gu, gv)
-    parts_u = partition_u(g, k, seed=seed).parts_u
-    parts_v = partition_v(g, parts_u, k, sweeps=2)
+    res = partition(g, ParsaConfig(k=k, backend=backend, seed=seed,
+                                   refine_v=True, sweeps=2))
+    parts_u, parts_v = res.parts_u, res.parts_v
     parts_v = parts_v.copy()
     unused = np.flatnonzero(parts_v < 0)
     if unused.size:

@@ -25,15 +25,17 @@ jax_partition.py.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from .bipartite import BipartiteGraph
 from .costs import need_matrix
-from .partition_u import partition_u
+from .partition_u import partition_u_impl
 from .subgraphs import divide
 
-__all__ = ["ParallelParsa", "ParsaReport", "global_initialization"]
+__all__ = ["ParallelParsa", "ParsaReport", "global_initialization",
+           "parallel_parsa_impl"]
 
 
 @dataclasses.dataclass
@@ -59,12 +61,90 @@ def global_initialization(
     m = max(1, int(graph.num_u * sample_frac))
     sample = np.sort(rng.choice(graph.num_u, size=m, replace=False))
     sg = graph.subgraph_u(sample)
-    res = partition_u(sg, k, theta=theta, select=select, seed=seed)
+    res = partition_u_impl(sg, k, theta=theta, select=select, seed=seed)
     return need_matrix(sg, res.parts_u, k)
 
 
+def parallel_parsa_impl(
+    graph: BipartiteGraph,
+    k: int,
+    b: int,
+    a: int = 0,
+    workers: int = 4,
+    tau: int | None = 0,
+    theta: int = 1000,
+    select: str = "size",
+    seed: int = 0,
+    init_sets: np.ndarray | None = None,
+) -> tuple[ParsaReport, np.ndarray]:
+    """Deterministic simulation of Alg 4 with W workers and max delay τ.
+
+    Returns (report, final server neighbor sets S (k, |V|) bool) — the sets
+    support warm-start / incremental repartitioning through the facade.
+    """
+    W = workers
+    plan = divide(graph, b, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+
+    S_server = (
+        np.zeros((k, graph.num_v), dtype=bool)
+        if init_sets is None
+        else np.asarray(init_sets, dtype=bool).copy()
+    )
+    parts_u = np.full(graph.num_u, -1, dtype=np.int32)
+    pushed = pulled = missed = 0
+
+    # pending pushes: list of (apply_at_task, replace?, delta_sets)
+    pending: list[tuple[int, bool, np.ndarray]] = []
+
+    def flush(now: int):
+        nonlocal S_server
+        still = []
+        for at, replace, delta in pending:
+            if at <= now:
+                if replace:
+                    S_server = delta.copy()
+                else:
+                    S_server |= delta
+            else:
+                still.append((at, replace, delta))
+        pending[:] = still
+
+    schedule = [("init", t % b) for t in range(a)] + [("real", j) for j in range(b)]
+    for t, (mode, j) in enumerate(schedule):
+        flush(t)
+        missed += len(pending)  # pushes in flight ⇒ invisible to this pull
+        sg = plan.subgraphs[j]
+        # pull: only the slice of S touching this subgraph's V support
+        support = np.unique(sg.u_indices)
+        pulled += int(S_server[:, support].size // 8)  # bitmask bytes
+        S_local = S_server.copy()
+        res = partition_u_impl(
+            sg, k, init_sets=S_local, theta=theta, select=select, seed=seed + t,
+        )
+        if mode == "init":
+            new_sets = need_matrix(sg, res.parts_u, k)
+            delay = 1 if tau is None else 1 + int(rng.integers(0, tau + 1))
+            pending.append((t + delay, True, new_sets))
+        else:
+            parts_u[plan.blocks[j]] = res.parts_u
+            delta = res.neighbor_sets & ~S_local  # push only the change
+            pushed += int(delta.sum())  # set-delta entries (ids)
+            delay = 1 if tau is None else 1 + int(rng.integers(0, tau + 1))
+            # model W concurrent workers: a push lands after the in-flight
+            # window of W−1 peer tasks plus the bounded delay
+            pending.append((t + (W - 1) + delay, False, res.neighbor_sets))
+    flush(len(schedule) + max(1, W) + (tau or 0) + 2)
+    report = ParsaReport(parts_u, pushed * 4, pulled, len(schedule), missed)
+    return report, S_server
+
+
 class ParallelParsa:
-    """Deterministic simulation of Alg 4 with W workers and max delay τ."""
+    """Deterministic simulation of Alg 4 with W workers and max delay τ.
+
+    Deprecated shim — use ``repro.api.partition`` with
+    ``backend="parallel_sim"``; ``run`` delegates to the backend registry and
+    returns a bit-identical ``ParsaReport``."""
 
     def __init__(
         self,
@@ -89,58 +169,19 @@ class ParallelParsa:
         a: int = 0,
         init_sets: np.ndarray | None = None,
     ) -> ParsaReport:
-        k, W = self.k, self.workers
-        plan = divide(graph, b, seed=self.seed)
-        rng = np.random.default_rng(self.seed + 1)
+        warnings.warn(
+            "ParallelParsa.run is deprecated; use repro.api.partition(graph, "
+            "ParsaConfig(k=..., backend='parallel_sim', blocks=b, "
+            "init_iters=a, workers=..., tau=...))",
+            DeprecationWarning, stacklevel=2)
+        from ..api import ParsaConfig
+        from ..api_backends import get_backend
 
-        S_server = (
-            np.zeros((k, graph.num_v), dtype=bool)
-            if init_sets is None
-            else np.asarray(init_sets, dtype=bool).copy()
-        )
-        parts_u = np.full(graph.num_u, -1, dtype=np.int32)
-        pushed = pulled = missed = 0
-
-        # pending pushes: list of (apply_at_task, replace?, delta_sets)
-        pending: list[tuple[int, bool, np.ndarray]] = []
-
-        def flush(now: int):
-            nonlocal S_server
-            still = []
-            for at, replace, delta in pending:
-                if at <= now:
-                    if replace:
-                        S_server = delta.copy()
-                    else:
-                        S_server |= delta
-                else:
-                    still.append((at, replace, delta))
-            pending[:] = still
-
-        schedule = [("init", t % b) for t in range(a)] + [("real", j) for j in range(b)]
-        for t, (mode, j) in enumerate(schedule):
-            flush(t)
-            missed += len(pending)  # pushes in flight ⇒ invisible to this pull
-            sg = plan.subgraphs[j]
-            # pull: only the slice of S touching this subgraph's V support
-            support = np.unique(sg.u_indices)
-            pulled += int(S_server[:, support].size // 8)  # bitmask bytes
-            S_local = S_server.copy()
-            res = partition_u(
-                sg, k, init_sets=S_local, theta=self.theta,
-                select=self.select, seed=self.seed + t,
-            )
-            if mode == "init":
-                new_sets = need_matrix(sg, res.parts_u, k)
-                delay = 1 if self.tau is None else 1 + int(rng.integers(0, self.tau + 1))
-                pending.append((t + delay, True, new_sets))
-            else:
-                parts_u[plan.blocks[j]] = res.parts_u
-                delta = res.neighbor_sets & ~S_local  # push only the change
-                pushed += int(delta.sum())  # set-delta entries (ids)
-                delay = 1 if self.tau is None else 1 + int(rng.integers(0, self.tau + 1))
-                # model W concurrent workers: a push lands after the in-flight
-                # window of W−1 peer tasks plus the bounded delay
-                pending.append((t + (W - 1) + delay, False, res.neighbor_sets))
-        flush(len(schedule) + max(1, W) + (self.tau or 0) + 2)
-        return ParsaReport(parts_u, pushed * 4, pulled, len(schedule), missed)
+        cfg = ParsaConfig(
+            k=self.k, backend="parallel_sim", blocks=b, init_iters=a,
+            workers=self.workers, tau=self.tau, theta=self.theta,
+            select=self.select, seed=self.seed, refine_v=False)
+        out = get_backend(cfg.backend)(graph, cfg, init_sets=init_sets)
+        t = out.traffic
+        return ParsaReport(out.parts_u, t.pushed_bytes, t.pulled_bytes,
+                           t.tasks, t.stale_pushes_missed)

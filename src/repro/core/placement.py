@@ -21,11 +21,9 @@ import numpy as np
 
 from .bipartite import BipartiteGraph
 from .costs import evaluate, need_matrix
-from .partition_u import partition_u
-from .partition_v import partition_v
-from .subgraphs import sequential_parsa
 
-__all__ = ["Placement", "build_placement", "gather_traffic"]
+__all__ = ["Placement", "build_placement", "placement_from_parts",
+           "gather_traffic"]
 
 
 @dataclasses.dataclass
@@ -41,6 +39,35 @@ class Placement:
         return self.vocab_perm[token_ids]
 
 
+def placement_from_parts(
+    parts_u: np.ndarray,
+    parts_v: np.ndarray,
+    num_v: int,
+    k: int,
+) -> Placement:
+    """Derive the embedding layout from finished (parts_u, parts_v)."""
+    # unused vocab rows: spread round-robin over the least-loaded shards
+    parts_v = np.asarray(parts_v).copy()
+    unused = np.flatnonzero(parts_v < 0)
+    if unused.size:
+        counts = np.bincount(parts_v[parts_v >= 0], minlength=k)
+        fill = np.argsort(counts, kind="stable")
+        parts_v[unused] = fill[np.arange(unused.size) % k]
+    # build the contiguous permutation: rows of shard 0 first, etc.
+    order = np.argsort(parts_v, kind="stable")
+    vocab_perm = np.empty(num_v, dtype=np.int64)
+    vocab_perm[order] = np.arange(num_v)
+    counts = np.bincount(parts_v, minlength=k).astype(np.int64)
+    return Placement(
+        k=k,
+        doc_to_shard=np.asarray(parts_u).astype(np.int32),
+        vocab_to_shard=parts_v.astype(np.int32),
+        vocab_perm=vocab_perm,
+        vocab_unperm=order,
+        shard_row_counts=counts,
+    )
+
+
 def build_placement(
     graph: BipartiteGraph,
     k: int,
@@ -49,40 +76,27 @@ def build_placement(
     sweeps: int = 2,
     seed: int = 0,
     method: str = "parsa",
+    backend: str = "host",
 ) -> Placement:
-    """Partition the doc×vocab graph and derive the embedding layout."""
+    """Partition the doc×vocab graph and derive the embedding layout.
+
+    ``method="parsa"`` runs the whole pipeline through
+    ``repro.api.partition`` on the chosen ``backend``."""
     if method == "parsa":
-        if b <= 1:
-            parts_u = partition_u(graph, k, seed=seed).parts_u
-        else:
-            parts_u = sequential_parsa(graph, k, b=b, a=a, seed=seed)
-        parts_v = partition_v(graph, parts_u, k, sweeps=sweeps)
-    elif method == "random":
+        from ..api import ParsaConfig, partition  # lazy: placement ↔ api
+
+        cfg = ParsaConfig(
+            k=k, backend=backend,
+            blocks=b if b > 1 else 1,
+            init_iters=a if b > 1 else 0,  # b<=1 ran plain Alg 3 pre-facade
+            sweeps=sweeps, seed=seed, refine_v=True, placement=True)
+        return partition(graph, cfg).placement
+    if method == "random":
         rng = np.random.default_rng(seed)
         parts_u = rng.permutation(np.arange(graph.num_u) % k).astype(np.int32)
         parts_v = rng.permutation(np.arange(graph.num_v) % k).astype(np.int32)
-    else:
-        raise ValueError(method)
-    # unused vocab rows: spread round-robin over the least-loaded shards
-    parts_v = parts_v.copy()
-    unused = np.flatnonzero(parts_v < 0)
-    if unused.size:
-        counts = np.bincount(parts_v[parts_v >= 0], minlength=k)
-        fill = np.argsort(counts, kind="stable")
-        parts_v[unused] = fill[np.arange(unused.size) % k]
-    # build the contiguous permutation: rows of shard 0 first, etc.
-    order = np.argsort(parts_v, kind="stable")
-    vocab_perm = np.empty(graph.num_v, dtype=np.int64)
-    vocab_perm[order] = np.arange(graph.num_v)
-    counts = np.bincount(parts_v, minlength=k).astype(np.int64)
-    return Placement(
-        k=k,
-        doc_to_shard=parts_u.astype(np.int32),
-        vocab_to_shard=parts_v.astype(np.int32),
-        vocab_perm=vocab_perm,
-        vocab_unperm=order,
-        shard_row_counts=counts,
-    )
+        return placement_from_parts(parts_u, parts_v, graph.num_v, k)
+    raise ValueError(method)
 
 
 def gather_traffic(graph: BipartiteGraph, placement: Placement) -> dict:

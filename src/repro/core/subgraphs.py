@@ -16,14 +16,15 @@ Initialization (§4.4):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from .bipartite import BipartiteGraph
 from .costs import need_matrix
-from .partition_u import partition_u
+from .partition_u import partition_u_impl
 
-__all__ = ["divide", "sequential_parsa", "SubgraphPlan"]
+__all__ = ["divide", "sequential_parsa", "sequential_parsa_impl", "SubgraphPlan"]
 
 
 @dataclasses.dataclass
@@ -51,10 +52,36 @@ def sequential_parsa(
     seed: int = 0,
     init_sets: np.ndarray | None = None,
 ) -> np.ndarray:
+    """Deprecated shim — use ``repro.api.partition`` with ``backend="host"``
+    and ``blocks=b`` / ``init_iters=a``.  Output is bit-identical to the
+    pre-facade implementation (``sequential_parsa_impl``)."""
+    warnings.warn(
+        "repro.core.sequential_parsa is deprecated; use repro.api.partition("
+        "graph, ParsaConfig(k=..., backend='host', blocks=b, init_iters=a))",
+        DeprecationWarning, stacklevel=2)
+    from ..api import ParsaConfig
+    from ..api_backends import get_backend
+
+    cfg = ParsaConfig(k=k, backend="host", blocks=b, init_iters=a,
+                      theta=theta, select=select, seed=seed, refine_v=False)
+    return get_backend(cfg.backend)(graph, cfg, init_sets=init_sets).parts_u
+
+
+def sequential_parsa_impl(
+    graph: BipartiteGraph,
+    k: int,
+    b: int = 16,
+    a: int = 0,
+    theta: int = 1000,
+    select: str = "size",
+    seed: int = 0,
+    init_sets: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
     """Single-thread Parsa: a init iterations + b real iterations (§4.2/§4.4).
 
-    Returns parts_u over the full graph.  ``init_sets`` supports the
-    incremental-partitioning mode (seed from a previous run).
+    Returns (parts_u over the full graph, final neighbor sets S (k, |V|)
+    bool).  ``init_sets`` supports the incremental-partitioning mode (seed
+    from a previous run).
     """
     plan = divide(graph, b, seed=seed)
     S = (
@@ -67,14 +94,16 @@ def sequential_parsa(
     # neighbor sets and drop assignments (§4.4).
     for t in range(a):
         sg = plan.subgraphs[t % b]
-        res = partition_u(sg, k, init_sets=S, theta=theta, select=select, seed=seed + t)
+        res = partition_u_impl(sg, k, init_sets=S, theta=theta, select=select,
+                               seed=seed + t)
         S = need_matrix(sg, res.parts_u, k)  # reset: S_i ← N(U_{i,t})
 
     # ---- real pass: union-accumulate S, keep assignments.
     parts_u = np.full(graph.num_u, -1, dtype=np.int32)
     for j in range(b):
         sg = plan.subgraphs[j]
-        res = partition_u(sg, k, init_sets=S, theta=theta, select=select, seed=seed + a + j)
+        res = partition_u_impl(sg, k, init_sets=S, theta=theta, select=select,
+                               seed=seed + a + j)
         parts_u[plan.blocks[j]] = res.parts_u
         S = res.neighbor_sets  # already S ∪ N(U_{i,j})
-    return parts_u
+    return parts_u, S

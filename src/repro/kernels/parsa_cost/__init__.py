@@ -6,6 +6,7 @@ from .ops import (  # noqa: F401
     pack_bitmask_csr_sparse,
     parsa_cost,
     parsa_cost_select,
+    unpack_bitmask,
 )
 from .ref import (  # noqa: F401
     BIG,

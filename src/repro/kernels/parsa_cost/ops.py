@@ -36,6 +36,17 @@ def pack_bitmask(ids_per_row: list[np.ndarray] | np.ndarray, num_v: int) -> np.n
     return out.view(np.int32)
 
 
+def unpack_bitmask(masks: np.ndarray, num_v: int) -> np.ndarray:
+    """Inverse of ``pack_bitmask``: (rows, ceil(num_v/32)) int32 bitmasks →
+    (rows, num_v) bool membership matrix.  Exact round trip:
+    ``unpack_bitmask(pack_bitmask(x, num_v), num_v) == x``."""
+    masks = np.ascontiguousarray(masks).view(np.uint32)
+    rows, W = masks.shape
+    bits = np.unpackbits(
+        masks.view(np.uint8).reshape(rows, W * 4), axis=-1, bitorder="little")
+    return bits[:, :num_v].astype(bool)
+
+
 def _gather_row_cols(
     indptr: np.ndarray,
     indices: np.ndarray,

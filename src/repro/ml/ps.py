@@ -56,6 +56,17 @@ class TrafficMeter:
 
 
 class PSCluster:
+    @classmethod
+    def from_partition(cls, graph, labels, result, cfg, **kw) -> "PSCluster":
+        """Build the cluster from a ``repro.api.PartitionResult`` — the
+        supported path for wiring a Parsa layout into the PS simulation."""
+        if result.parts_v is None:
+            raise ValueError(
+                "PartitionResult has no parts_v; run repro.api.partition "
+                "with ParsaConfig(refine_v=True)")
+        return cls(graph, labels, result.parts_u, result.parts_v,
+                   result.k, cfg, **kw)
+
     def __init__(
         self,
         graph: BipartiteGraph,
