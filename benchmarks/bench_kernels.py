@@ -69,6 +69,17 @@ def bench_partitioner(rows, n_u=100_000, num_v=65_536, k=16, block=256):
                  "us_per_call": t_new * 1e6,
                  "derived": f"speedup={t_seed / t_new:.2f}x,parity=exact",
                  "backend": cfg_new.backend})
+    # block-size sweep: the VMEM-resident regime the fused select kernel
+    # targets is B=1024 (tile never leaves VMEM); on CPU the jnp path shows
+    # how round count (fewer, fatter blocks) trades against tile width
+    for B in (512, 1024):
+        cfg_b = cfg_new.replace(block_size=B)
+        partition(g, cfg_b)
+        res_b = partition(g, cfg_b)
+        rows.append({"name": f"blocked_partition_device_scan_B{B}",
+                     "us_per_call": res_b.timings["partition_u"] * 1e6,
+                     "derived": f"vs_B{block}={t_new / res_b.timings['partition_u']:.2f}x",
+                     "backend": cfg_b.backend})
 
 
 def run(scale: float = 1.0, n_u: int | None = None, num_v: int | None = None):
@@ -98,6 +109,18 @@ def run(scale: float = 1.0, n_u: int | None = None, num_v: int | None = None):
                      a, b, r, use_kernel=True, interpret=True)[0],
                         nbr, s, retired),
                  "derived": "correctness-scale only", "backend": "-"})
+    # B=1024 VMEM-resident tile: the fused kernel's target block size
+    # (4·B·k bytes of scratch, no HBM round-trip); interpret-mode timing is
+    # correctness-scale, the roofline table carries the TPU numbers
+    nbr_1k = jnp.asarray(pack_bitmask(
+        [rng.choice(nv, size=40, replace=False) for _ in range(1024)], nv))
+    retired_1k = jnp.zeros((1024,), bool)
+    rows.append({"name": "parsa_select_pallas_interpret_B1024", "us_per_call":
+                 _bench(lambda a, b, r: parsa_cost_select(
+                     a, b, r, use_kernel=True, interpret=True)[0],
+                        nbr_1k, s, retired_1k),
+                 "derived": "VMEM-resident tile,correctness-scale",
+                 "backend": "-"})
     # flash attention
     B, S, H, D = 1, 512, 4, 64
     q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)

@@ -23,7 +23,24 @@ import pathlib
 import numpy as np
 
 HW = {"peak": 197e12, "hbm": 819e9, "ici": 50e9}
-DRY = pathlib.Path(__file__).resolve().parent / "out" / "dryrun"
+OUT = pathlib.Path(__file__).resolve().parent / "out"
+DRY = OUT / "dryrun"
+
+
+def emit_parsa_bench(rows: list[dict], name: str = "BENCH_parsa",
+                     meta: dict | None = None) -> pathlib.Path:
+    """Machine-readable Parsa perf trajectory: benchmarks/out/<name>.json.
+
+    ``rows`` carry one partitioning run each (backend, workers, wall-clock
+    seconds, traffic counters/quality); the driver tracks these across PRs,
+    so keys must stay append-only.  Returns the written path.
+    """
+    OUT.mkdir(exist_ok=True)
+    path = OUT / f"{name}.json"
+    payload = {"benchmark": "parsa", **(meta or {}), "rows": rows}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path}")
+    return path
 
 SHAPE_INFO = {
     "train_4k": dict(kind="train", seq=4096, batch=256),

@@ -15,8 +15,9 @@ the one place it is exposed:
     res2 = res.refine(tomorrows_graph)    # warm-start / incremental
 
 Backends (``host``, ``device_scan``, ``host_blocked_oracle``,
-``parallel_sim``) live in the registry in ``repro.api_backends``; add a
-strategy with ``@register_backend`` instead of a new module-level function.
+``parallel_sim``, ``parallel_device``) live in the registry in
+``repro.api_backends``; add a strategy with ``@register_backend`` instead
+of a new module-level function.
 The five pre-facade entry points (``partition_u``, ``sequential_parsa``,
 ``ParallelParsa.run``, ``blocked_partition_u``,
 ``blocked_partition_u_hostloop``) remain as deprecation-warning shims that
@@ -89,10 +90,13 @@ class ParsaConfig:
     use_kernel: bool = False   # fused Pallas cost+select (TPU) vs jnp path
     interpret: bool | None = None  # force Pallas interpret mode (CI)
 
-    # ---- simulated-parallel backend knobs (Alg 4)
+    # ---- parallel backend knobs (Alg 4: parallel_sim / parallel_device)
     workers: int = 4           # W concurrent workers
     tau: int | None = 0        # max push delay in tasks; None = eventual
     global_init_frac: float = 0.0  # §4.4 global-init sample fraction
+    merge_every: int = 1       # parallel_device: blocks between OR-merges
+                               #   (τ ≡ merge_every − 1 blocks of staleness)
+    devices: int | None = None  # parallel_device mesh width; None → workers
 
     # ---- composition
     refine_v: bool = True      # run Alg 2 (partition_v) after partition_u
@@ -125,6 +129,12 @@ class ParsaConfig:
         if not 0.0 <= self.global_init_frac <= 1.0:
             raise ValueError(
                 f"global_init_frac must be in [0, 1], got {self.global_init_frac}")
+        if self.merge_every < 1:
+            raise ValueError(
+                f"merge_every must be >= 1, got {self.merge_every}")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(
+                f"devices must be >= 1 or None, got {self.devices}")
         if self.sweeps < 1:
             raise ValueError(f"sweeps must be >= 1, got {self.sweeps}")
         if self.placement and not self.refine_v:
@@ -152,7 +162,7 @@ class PartitionResult:
     config: ParsaConfig
     metrics: PartitionMetrics
     timings: dict[str, float]           # seconds per phase + "total"
-    traffic: TrafficCounters | None = None   # parallel_sim only
+    traffic: TrafficCounters | None = None   # parallel_sim / parallel_device
     placement: "Placement | None" = None     # config.placement only
     _packed_sets: np.ndarray | None = dataclasses.field(
         default=None, repr=False, compare=False)

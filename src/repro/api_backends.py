@@ -12,8 +12,12 @@ uniform signature ``fn(graph, config, init_sets=None) -> BackendOutput``:
   * ``host_blocked_oracle`` — the seed per-block host loop, kept as the
     parity oracle and benchmark baseline.
   * ``parallel_sim``        — the deterministic Alg 4 parameter-server
-    simulation with W workers and bounded delay τ; the only backend that
-    fills ``BackendOutput.traffic``.
+    simulation with W workers and bounded delay τ, on the packed-word wire
+    format; fills ``BackendOutput.traffic``.
+  * ``parallel_device``     — the real distributed Alg 4: shard_map multi-
+    worker blocked scans over packed bitmasks with periodic all_gather +
+    OR merges (``merge_every`` blocks of staleness); fills
+    ``BackendOutput.traffic`` with the same word-byte units.
 
 New distributed strategies (e.g. randomized distributed submodular
 maximization, arXiv:1502.02606, or sparse-DNN partitioning workloads,
@@ -35,6 +39,7 @@ from .core.bipartite import BipartiteGraph
 from .core.jax_partition import (
     blocked_partition_u_hostloop_impl,
     blocked_partition_u_impl,
+    parallel_blocked_partition_u_impl,
 )
 from .core.parallel import global_initialization, parallel_parsa_impl
 from .core.partition_u import partition_u_impl
@@ -52,11 +57,17 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class TrafficCounters:
-    """Parameter-server traffic of the partitioning run itself (Alg 4) —
-    previously exclusive to ``ParsaReport``."""
+    """Parameter-server traffic of the partitioning run itself (Alg 4).
 
-    pushed_bytes: int = 0          # worker→server traffic (delta encoding)
-    pulled_bytes: int = 0          # server→worker traffic
+    Units are *bitmask-word bytes* in both directions (4 bytes per 32
+    parameters, the packed wire format shared by ``parallel_sim`` and
+    ``parallel_device``): pulls count the packed words a worker reads
+    (``parallel_sim``: the words covering the task's V support;
+    ``parallel_device``: the full (k, W) set per merge), pushes count the
+    delta-encoded changed words (Alg 4 worker line 9)."""
+
+    pushed_bytes: int = 0          # worker→server traffic (delta-encoded words)
+    pulled_bytes: int = 0          # server→worker traffic (packed words)
     tasks: int = 0
     stale_pushes_missed: int = 0   # pushes invisible to a pull due to delay
 
@@ -155,11 +166,40 @@ def parallel_sim_backend(graph: BipartiteGraph, config, init_sets=None) -> Backe
         init_sets = global_initialization(
             graph, config.k, sample_frac=config.global_init_frac,
             theta=config.theta, select=config.select, seed=config.seed)
-    report, sets = parallel_parsa_impl(
+    report, s_masks = parallel_parsa_impl(
         graph, config.k, b=config.blocks, a=config.init_iters,
         workers=config.workers, tau=config.tau, theta=config.theta,
         select=config.select, seed=config.seed, init_sets=init_sets)
     traffic = TrafficCounters(
         pushed_bytes=report.pushed_bytes, pulled_bytes=report.pulled_bytes,
         tasks=report.tasks, stale_pushes_missed=report.stale_pushes_missed)
-    return BackendOutput(report.parts_u, neighbor_sets=sets, traffic=traffic)
+    return BackendOutput(report.parts_u, s_masks=s_masks, traffic=traffic)
+
+
+@register_backend("parallel_device")
+def parallel_device_backend(graph: BipartiteGraph, config, init_sets=None) -> BackendOutput:
+    """Device-parallel Algorithm 4: shard_map multi-worker blocked Parsa.
+
+    ``config.workers`` shards of U run the single-dispatch blocked scan
+    concurrently, one per mesh device, each against a device-local stale
+    copy of the packed server sets; every ``config.merge_every`` blocks the
+    shards OR-merge (all_gather + lattice OR on uint32 words, the bulk-
+    synchronous server union-push, τ ≡ merge_every − 1).  ``config.devices``
+    overrides the mesh width (defaults to ``workers``); with one worker the
+    output is bit-identical to ``device_scan``.  Global sizes stay balanced
+    within ``workers`` (stale catch-ups can overlap when k ∤ |U| — see
+    ``parallel_blocked_partition_u_impl``).  Supports §4.4 global
+    initialization via ``global_init_frac`` like ``parallel_sim``.
+    """
+    if init_sets is None and config.global_init_frac > 0:
+        init_sets = global_initialization(
+            graph, config.k, sample_frac=config.global_init_frac,
+            theta=config.theta, select=config.select, seed=config.seed)
+    workers = config.devices if config.devices is not None else config.workers
+    parts_u, s_masks, traffic = parallel_blocked_partition_u_impl(
+        graph, config.k, workers=workers, block=config.block_size,
+        merge_every=config.merge_every, init_sets=init_sets,
+        use_kernel=config.use_kernel, interpret=config.interpret,
+        seed=config.seed, cap=config.cap)
+    return BackendOutput(parts_u, s_masks=s_masks,
+                         traffic=TrafficCounters(**traffic))

@@ -85,6 +85,7 @@ __all__ = [
     "blocked_partition_u_hostloop",
     "blocked_partition_u_impl",
     "blocked_partition_u_hostloop_impl",
+    "parallel_blocked_partition_u_impl",
     "shard_parsa_step",
     "pack_graph_blocks",
     "PackedBlocks",
@@ -313,20 +314,25 @@ def _assign_block_rounds(
         # Fused cost+select recomputes the (B, k) tile in VMEM each round
         # and reduces it in the same pass — no tile is carried at all, so
         # the state holds a placeholder.
+        nbr_t = None
         tile0 = jnp.zeros((1, 1), jnp.int32)
     else:
         # jnp path: carry the tile and down-date it sparsely.  Initial tile
         # cost[v, i] = deg(v) − |N(v) ∩ S_i|: the intersection only touches
         # each row's ≤ cap nonzero words, so gather S at widx instead of
         # the dense (B, k, W) product; any truncated row in the block trips
-        # the exact dense fallback (rare for cap ≈ 48).
+        # the exact dense fallback (rare for cap ≈ 48).  Both sparse
+        # gathers run over *transposed* operands so each gathered index
+        # pulls a contiguous row instead of a strided column — XLA CPU's
+        # element gather was the down-date bottleneck (~45% of scan time).
+        nbr_t = nbr.T                                      # (W, B)
         deg = jax.lax.population_count(vals).astype(jnp.int32).sum(-1)
 
         def sparse_init(_):
-            sg = s_masks[:, widx.reshape(-1)].reshape(k, B, cap)
+            sg = s_masks.T[widx.reshape(-1)].reshape(B, cap, k)
             inter = jax.lax.population_count(
-                sg & vals[None]).astype(jnp.int32).sum(-1)  # (k, B)
-            return deg[:, None] - inter.T
+                sg & vals[:, :, None]).astype(jnp.int32).sum(1)  # (B, k)
+            return deg[:, None] - inter
 
         def dense_init(_):
             return parsa_cost(nbr, s_masks, use_kernel=False)
@@ -362,9 +368,9 @@ def _assign_block_rounds(
             d_vals = jnp.where(act[:, None], d_sel_vals & ~s_at, 0)
 
             def sparse_dec(_):
-                g = nbr[:, d_widx.reshape(-1)].reshape(B, k, cap)
+                g = nbr_t[d_widx.reshape(-1)].reshape(k, cap, B)
                 return jax.lax.population_count(
-                    g & d_vals[None]).astype(jnp.int32).sum(-1)
+                    g & d_vals[:, :, None]).astype(jnp.int32).sum(1).T
 
             def dense_dec(_):
                 s_cols = s_masks if ord_ is None else s_masks[ord_]
@@ -573,6 +579,189 @@ def blocked_partition_u_hostloop(
                       refine_v=False)
     out = get_backend(cfg.backend)(graph, cfg, init_sets=init_sets)
     return (out.parts_u, out.s_masks) if return_sets else out.parts_u
+
+
+def _pad_block_stack(packed: PackedBlocks, n_total: int) -> PackedBlocks:
+    """Append ``n_total - n_blocks`` empty blocks (all rows padding: valid
+    False, tr_ids == B ⇒ dropped) so a block stack divides evenly into
+    per-worker shards and merge groups.  Empty blocks assign nothing and
+    leave (S, sizes) untouched, so trailing padding is parity-safe."""
+    nb, B = packed.valid.shape
+    if n_total == nb:
+        return packed
+    e = n_total - nb
+
+    def pad0(a):
+        return np.pad(a, [(0, e)] + [(0, 0)] * (a.ndim - 1))
+
+    tr_pad = np.full((e, packed.tr_ids.shape[1]), B, np.int32)
+    return PackedBlocks(
+        valid=pad0(packed.valid),
+        widx=pad0(packed.widx),
+        vals=pad0(packed.vals),
+        trunc=pad0(packed.trunc),
+        tr_ids=np.concatenate([packed.tr_ids, tr_pad]),
+        tr_masks=pad0(packed.tr_masks),
+        order=packed.order,
+    )
+
+
+@functools.cache
+def _parallel_scan_fn(devices, k: int, merge_every: int, use_kernel: bool,
+                      interpret: bool | None):
+    """Build (and cache) the jitted shard_map pipeline for one worker mesh.
+
+    Each device scans its (n_super, merge_every, B, …) block stack against a
+    device-local *stale* copy of the packed (k, W) server sets; after every
+    ``merge_every`` blocks the shards merge by all_gather + lattice OR on
+    uint32 words (the bulk-synchronous image of the Alg 4 server union-push,
+    τ ≡ merge_every − 1 blocks of staleness) and sizes by psum of the local
+    deltas.  The (S, sizes) carries are donated, so nothing round-trips
+    through the host between merges.  Also returns the total number of
+    changed words pushed across all merges (the delta-encoded worker→server
+    traffic of Alg 4 worker line 9).
+    """
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ..compat import shard_map
+
+    axis = "parsa_workers"
+    mesh = Mesh(np.asarray(devices), (axis,))
+
+    def body(valid, widx, vals, trunc, tr_ids, tr_masks, s_masks, sizes):
+        # shard_map leaves the sharded leading axis in place with local
+        # extent 1 — drop it, then group blocks into merge rounds.
+        valid, widx, vals, trunc, tr_ids, tr_masks = (
+            x[0] for x in (valid, widx, vals, trunc, tr_ids, tr_masks))
+        nb = valid.shape[0]
+        n_super = nb // merge_every
+
+        def group(x):
+            return x.reshape((n_super, merge_every) + x.shape[1:])
+
+        def per_block(carry, xs):
+            s, sz = carry
+            parts, s, sz = _assign_block_rounds(
+                *xs, s, sz, k=k, use_kernel=use_kernel, interpret=interpret)
+            return (s, sz), parts
+
+        def super_step(carry, xs):
+            s_global, sz_global, pushed = carry
+            # local greedy over merge_every blocks against the stale copy
+            (s_local, sz_local), parts = jax.lax.scan(
+                per_block, (s_global, sz_global), xs)
+            # worker push is delta-encoded: count the changed words
+            pushed = pushed + jnp.count_nonzero(
+                s_local & ~s_global).astype(jnp.int32)
+            # server union-push: OR-merge the neighbor sets across workers,
+            # and psum the size *deltas* onto the shared pre-merge totals
+            gathered = jax.lax.all_gather(s_local, axis)
+            s_merged = jax.lax.reduce(
+                gathered, jnp.int32(0), jax.lax.bitwise_or, dimensions=(0,))
+            sz_merged = sz_global + jax.lax.psum(sz_local - sz_global, axis)
+            return (s_merged, sz_merged, pushed), parts
+
+        (s_masks, sizes, pushed), parts = jax.lax.scan(
+            super_step, (s_masks, sizes, jnp.int32(0)),
+            tuple(group(x) for x in
+                  (valid, widx, vals, trunc, tr_ids, tr_masks)))
+        pushed = jax.lax.psum(pushed, axis)
+        return parts[None], s_masks, sizes, pushed
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis),) * 6 + (P(), P()),
+        out_specs=(P(axis), P(), P(), P()),
+        check_vma=False)
+    return jax.jit(fn, donate_argnums=(6, 7))
+
+
+def parallel_blocked_partition_u_impl(
+    graph: BipartiteGraph,
+    k: int,
+    workers: int = 4,
+    block: int = 256,
+    merge_every: int = 1,
+    init_sets: np.ndarray | None = None,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
+    seed: int = 0,
+    cap: int = 48,
+    devices: tuple | None = None,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Device-parallel Algorithm 4: shard_map multi-worker Parsa.
+
+    The permuted U is packed once (same permutation as ``device_scan``) and
+    split into ``workers`` contiguous shards of whole blocks; one jitted
+    shard_map dispatch runs every worker's blocked scan and all the
+    periodic OR-merges.  With ``workers=1`` the schedule collapses to the
+    sequential ``device_scan`` pipeline bit-for-bit (the merge is the
+    identity), for any ``merge_every``.
+
+    Balance: every worker enforces §4.1 perfect balance against its *stale*
+    view of the global sizes, so when a merge lands with uneven sizes
+    (possible whenever k ∤ |U|) each worker independently applies the same
+    catch-up and the corrections overlap — global ``max|U_i| − min|U_i|``
+    is bounded by ``workers`` (exactly ≤ 1 at workers=1), a ≤ W/⌈|U|/k⌉
+    relative slack on objective (4).  This is the BSP analogue of the
+    staleness-induced quality slack of §5.4.
+
+    Returns (parts_u, final packed s_masks, traffic dict).  Traffic units
+    are bitmask-word bytes (4 bytes per 32 parameters): each worker pulls
+    the full packed (k, W) set at every merge and pushes only its changed
+    words (delta encoding); ``stale_pushes_missed`` counts the peer pushes
+    in flight during each worker's local phase — W−1 peers per worker per
+    merge round.
+    """
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1, got {workers}")
+    if merge_every < 1:
+        raise ValueError(f"merge_every must be >= 1, got {merge_every}")
+    if devices is None:
+        devices = tuple(jax.devices())
+    if len(devices) < workers:
+        raise ValueError(
+            f"parallel_device needs {workers} devices but only "
+            f"{len(devices)} are visible; on CPU hosts set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={workers} "
+            f"before importing jax")
+    devices = tuple(devices[:workers])
+    W = (graph.num_v + 31) // 32
+    if init_sets is None:
+        s_masks = jnp.zeros((k, W), jnp.int32)
+    else:
+        s_masks = jnp.asarray(
+            pack_bitmask(np.asarray(init_sets, bool), graph.num_v))
+    sizes = jnp.zeros((k,), jnp.int32)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(graph.num_u)
+    packed = pack_graph_blocks(graph, block, order=order, cap=cap)
+    nb = packed.valid.shape[0]
+    # blocks per worker, rounded up to whole merge groups
+    nb_per = -(-nb // workers)
+    nb_per = -(-nb_per // merge_every) * merge_every
+    packed = _pad_block_stack(packed, nb_per * workers)
+
+    def shard(x):
+        return jnp.asarray(x.reshape((workers, nb_per) + x.shape[1:]))
+
+    fn = _parallel_scan_fn(devices, k, merge_every, use_kernel, interpret)
+    _count_dispatch("parallel_partition_scan")
+    parts_blocks, s_out, _, pushed_words = fn(
+        shard(packed.valid), shard(packed.widx), shard(packed.vals),
+        shard(packed.trunc), shard(packed.tr_ids), shard(packed.tr_masks),
+        s_masks, sizes)
+    flat = np.asarray(parts_blocks).reshape(-1)[: graph.num_u]
+    parts = np.full(graph.num_u, -1, np.int32)
+    parts[order] = flat
+    n_super = nb_per // merge_every
+    traffic = {
+        "pushed_bytes": 4 * int(pushed_words),
+        "pulled_bytes": 4 * workers * n_super * k * W,
+        "tasks": workers * n_super,
+        "stale_pushes_missed": n_super * workers * (workers - 1),
+    }
+    return parts, np.asarray(s_out), traffic
 
 
 def shard_parsa_step(k: int, axis: str = "data", use_kernel: bool = False,

@@ -18,9 +18,17 @@ window only, pushes land immediately after their task).  §5.4's claim is
 that quality degrades ≤ ~5% under this staleness; benchmarks/bench_fig10
 reproduces the curve.
 
+Wire format: the server state, every pending push, and the delta extraction
+all live on *packed* uint32 bitmask words — the same (k, ceil(|V|/32))
+layout the device pipelines carry (``kernels/parsa_cost``).  A worker pull
+unpacks the packed view into a dense bool scratch (the worker's private
+working set, handed to Algorithm 3 without another copy via
+``copy_init=False``); nothing dense persists between tasks and the old
+per-task ``S_server.copy()`` dense snapshot is gone.
+
 This is the host-side runtime.  The TPU-native bulk-synchronous mapping of
-the same protocol (bitmask all-reduce OR == server union) lives in
-jax_partition.py.
+the same protocol (bitmask all-reduce OR == server union) is the
+``parallel_device`` backend (``jax_partition.parallel_blocked_partition_u_impl``).
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ import warnings
 
 import numpy as np
 
+from ..kernels.parsa_cost import pack_bitmask, packed_delta, packed_union
 from .bipartite import BipartiteGraph
 from .costs import need_matrix
 from .partition_u import partition_u_impl
@@ -40,9 +49,18 @@ __all__ = ["ParallelParsa", "ParsaReport", "global_initialization",
 
 @dataclasses.dataclass
 class ParsaReport:
+    """Traffic of the partitioning run itself, in *bitmask-word bytes*.
+
+    Both directions use the packed wire format (4 bytes per 32 parameters):
+    ``pulled_bytes`` counts the words covering each task's V support
+    (server→worker), ``pushed_bytes`` the delta-encoded changed words
+    (worker→server, Alg 4 worker line 9) — consistent units, directly
+    comparable to each other and to the ``parallel_device`` counters.
+    """
+
     parts_u: np.ndarray
-    pushed_bytes: int          # worker→server traffic (delta encoding)
-    pulled_bytes: int          # server→worker traffic
+    pushed_bytes: int          # worker→server traffic (delta-encoded words)
+    pulled_bytes: int          # server→worker traffic (support words)
     tasks: int
     stale_pushes_missed: int   # how many pushes were invisible due to delay
 
@@ -79,35 +97,54 @@ def parallel_parsa_impl(
 ) -> tuple[ParsaReport, np.ndarray]:
     """Deterministic simulation of Alg 4 with W workers and max delay τ.
 
-    Returns (report, final server neighbor sets S (k, |V|) bool) — the sets
-    support warm-start / incremental repartitioning through the facade.
+    Returns (report, final *packed* server neighbor sets (k, ceil(|V|/32))
+    int32) — the same wire format the device backends produce, so sets warm-
+    start either path through the facade.
     """
     W = workers
+    num_v = graph.num_v
+    W_words = (num_v + 31) // 32
     plan = divide(graph, b, seed=seed)
     rng = np.random.default_rng(seed + 1)
 
+    # server state is packed words, end to end; no dense copy of it exists
     S_server = (
-        np.zeros((k, graph.num_v), dtype=bool)
+        np.zeros((k, W_words), dtype=np.int32)
         if init_sets is None
-        else np.asarray(init_sets, dtype=bool).copy()
+        else pack_bitmask(np.asarray(init_sets, dtype=bool), num_v)
     )
     parts_u = np.full(graph.num_u, -1, dtype=np.int32)
-    pushed = pulled = missed = 0
+    pushed_words = pulled_words = missed = 0
 
-    # pending pushes: list of (apply_at_task, replace?, delta_sets)
+    # the worker's dense working set: ONE reusable (k, |V|) scratch for the
+    # whole run.  A pull expands the packed words into it in place (shift +
+    # mask with ``out=``), so tasks allocate no dense memory at all.
+    unpack_buf = np.empty((k, W_words * 4, 8), dtype=np.uint8)
+    scratch = unpack_buf.reshape(k, W_words * 32)[:, :num_v].view(np.bool_)
+    bit_idx = np.arange(8, dtype=np.uint8)
+
+    def pull() -> np.ndarray:
+        """Expand the packed server words into the dense scratch, in place
+        (little-endian bit/byte order — the exact inverse of
+        ``pack_bitmask``)."""
+        bytes_ = S_server.view(np.uint8).reshape(k, W_words * 4)
+        np.right_shift(bytes_[:, :, None], bit_idx, out=unpack_buf)
+        np.bitwise_and(unpack_buf, 1, out=unpack_buf)
+        return scratch
+
+    # pending pushes: list of (apply_at_task, replace?, packed_sets)
     pending: list[tuple[int, bool, np.ndarray]] = []
 
     def flush(now: int):
-        nonlocal S_server
         still = []
-        for at, replace, delta in pending:
+        for at, replace, sets in pending:
             if at <= now:
                 if replace:
-                    S_server = delta.copy()
+                    S_server[:] = sets
                 else:
-                    S_server |= delta
+                    S_server[:] = packed_union(S_server, sets)
             else:
-                still.append((at, replace, delta))
+                still.append((at, replace, sets))
         pending[:] = still
 
     schedule = [("init", t % b) for t in range(a)] + [("real", j) for j in range(b)]
@@ -115,27 +152,32 @@ def parallel_parsa_impl(
         flush(t)
         missed += len(pending)  # pushes in flight ⇒ invisible to this pull
         sg = plan.subgraphs[j]
-        # pull: only the slice of S touching this subgraph's V support
-        support = np.unique(sg.u_indices)
-        pulled += int(S_server[:, support].size // 8)  # bitmask bytes
-        S_local = S_server.copy()
+        # pull: only the packed words covering this subgraph's V support
+        pulled_words += k * np.unique(sg.u_indices >> 5).size
+        # the worker's private working set: expand the packed server view
+        # into the reusable dense scratch and hand it to Alg 3 *without*
+        # another per-task dense snapshot (copy_init=False mutates it).
         res = partition_u_impl(
-            sg, k, init_sets=S_local, theta=theta, select=select, seed=seed + t,
+            sg, k, init_sets=pull(), theta=theta, select=select,
+            seed=seed + t, copy_init=False,
         )
+        delay = 1 if tau is None else 1 + int(rng.integers(0, tau + 1))
         if mode == "init":
-            new_sets = need_matrix(sg, res.parts_u, k)
-            delay = 1 if tau is None else 1 + int(rng.integers(0, tau + 1))
-            pending.append((t + delay, True, new_sets))
+            new_packed = pack_bitmask(need_matrix(sg, res.parts_u, k), num_v)
+            pending.append((t + delay, True, new_packed))
         else:
             parts_u[plan.blocks[j]] = res.parts_u
-            delta = res.neighbor_sets & ~S_local  # push only the change
-            pushed += int(delta.sum())  # set-delta entries (ids)
-            delay = 1 if tau is None else 1 + int(rng.integers(0, tau + 1))
+            new_packed = pack_bitmask(res.neighbor_sets, num_v)
+            # push only the change — S_server is untouched since the pull,
+            # so the word delta vs the server equals the delta vs the pull
+            pushed_words += int(np.count_nonzero(
+                packed_delta(new_packed, S_server)))
             # model W concurrent workers: a push lands after the in-flight
             # window of W−1 peer tasks plus the bounded delay
-            pending.append((t + (W - 1) + delay, False, res.neighbor_sets))
+            pending.append((t + (W - 1) + delay, False, new_packed))
     flush(len(schedule) + max(1, W) + (tau or 0) + 2)
-    report = ParsaReport(parts_u, pushed * 4, pulled, len(schedule), missed)
+    report = ParsaReport(parts_u, pushed_words * 4, pulled_words * 4,
+                         len(schedule), missed)
     return report, S_server
 
 
@@ -143,8 +185,9 @@ class ParallelParsa:
     """Deterministic simulation of Alg 4 with W workers and max delay τ.
 
     Deprecated shim — use ``repro.api.partition`` with
-    ``backend="parallel_sim"``; ``run`` delegates to the backend registry and
-    returns a bit-identical ``ParsaReport``."""
+    ``backend="parallel_sim"``; ``run`` delegates to the backend registry.
+    ``parts_u`` is bit-identical to the pre-facade implementation; the
+    traffic counters use the PR-3 packed-word units (see ``ParsaReport``)."""
 
     def __init__(
         self,

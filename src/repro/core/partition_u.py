@@ -69,14 +69,24 @@ def partition_u_impl(
     theta: int = 1000,
     select: str = "size",
     seed: int = 0,
+    copy_init: bool = True,
 ) -> PartitionUResult:
-    """Run Algorithm 3 on ``graph`` with optional initial neighbor sets S_i."""
+    """Run Algorithm 3 on ``graph`` with optional initial neighbor sets S_i.
+
+    ``copy_init=False`` adopts ``init_sets`` as the working S and mutates it
+    in place — callers that already materialized a private dense scratch
+    (e.g. the Alg 4 worker pull in ``parallel.py``) skip the per-call
+    (k, |V|) copy.
+    """
     num_u, num_v = graph.num_u, graph.num_v
     if init_sets is None:
         S = np.zeros((k, num_v), dtype=bool)
-    else:
+    elif copy_init:
         S = np.asarray(init_sets, dtype=bool).copy()
         assert S.shape == (k, num_v)
+    else:
+        S = init_sets
+        assert S.dtype == bool and S.shape == (k, num_v) and S.flags.writeable
 
     # line 3: A_i(u) = |N(u) \ S_i| for all u — vectorized per partition.
     indptr, indices = graph.u_indptr, graph.u_indices

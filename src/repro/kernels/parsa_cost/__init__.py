@@ -4,6 +4,9 @@ from .ops import (  # noqa: F401
     pack_bitmask_csr,
     pack_bitmask_csr_compact,
     pack_bitmask_csr_sparse,
+    packed_delta,
+    packed_union,
+    packed_union_delta,
     parsa_cost,
     parsa_cost_select,
     unpack_bitmask,

@@ -12,7 +12,7 @@ from .ref import (
     parsa_select_greedy_ref,
     parsa_select_ref,
 )
-from .select import parsa_select_kernel
+from .select import packed_union_delta_kernel, parsa_select_kernel
 
 
 def _on_tpu() -> bool:
@@ -23,12 +23,15 @@ def pack_bitmask(ids_per_row: list[np.ndarray] | np.ndarray, num_v: int) -> np.n
     """Pack per-row V-id sets into (rows, ceil(num_v/32)) int32 bitmasks."""
     W = (num_v + 31) // 32
     if isinstance(ids_per_row, np.ndarray) and ids_per_row.ndim == 2:
-        # boolean membership matrix (rows, num_v)
+        # boolean membership matrix (rows, num_v); packbits binarizes the
+        # rows directly so no dense-sized astype/pad transient is allocated
         rows = ids_per_row.shape[0]
-        pad = W * 32 - num_v
-        bits = np.pad(ids_per_row.astype(np.uint8), [(0, 0), (0, pad)])
-        packed = np.packbits(bits.reshape(rows, W * 4, 8), axis=-1, bitorder="little")
-        return np.ascontiguousarray(packed.reshape(rows, W, 4)).view(np.uint32).reshape(rows, W).view(np.int32)
+        dense = ids_per_row if ids_per_row.dtype == np.bool_ \
+            else ids_per_row.astype(bool)
+        packed = np.packbits(dense, axis=-1, bitorder="little")  # (rows, ⌈V/8⌉)
+        out = np.zeros((rows, W * 4), dtype=np.uint8)
+        out[:, : packed.shape[1]] = packed
+        return out.view(np.uint32).reshape(rows, W).view(np.int32)
     out = np.zeros((len(ids_per_row), W), dtype=np.uint32)
     for r, ids in enumerate(ids_per_row):
         ids = np.asarray(ids, dtype=np.int64)
@@ -39,12 +42,60 @@ def pack_bitmask(ids_per_row: list[np.ndarray] | np.ndarray, num_v: int) -> np.n
 def unpack_bitmask(masks: np.ndarray, num_v: int) -> np.ndarray:
     """Inverse of ``pack_bitmask``: (rows, ceil(num_v/32)) int32 bitmasks →
     (rows, num_v) bool membership matrix.  Exact round trip:
-    ``unpack_bitmask(pack_bitmask(x, num_v), num_v) == x``."""
+    ``unpack_bitmask(pack_bitmask(x, num_v), num_v) == x``.
+
+    Allocates exactly one dense array: the 0/1 bytes from ``unpackbits``
+    are reinterpreted as bool (same itemsize) instead of copied, so a
+    worker pull in ``parallel.py`` costs one (rows, |V|) scratch, not two.
+    """
     masks = np.ascontiguousarray(masks).view(np.uint32)
     rows, W = masks.shape
     bits = np.unpackbits(
         masks.view(np.uint8).reshape(rows, W * 4), axis=-1, bitorder="little")
-    return bits[:, :num_v].astype(bool)
+    return bits[:, :num_v].view(np.bool_)
+
+
+def packed_union(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Word-wise union of packed bitmasks: the Alg 4 server OR-merge
+    (line 9) on the wire format — works on any int word dtype."""
+    return a | b
+
+
+def packed_delta(new: np.ndarray, old: np.ndarray) -> np.ndarray:
+    """Word-wise set difference ``new \\ old`` on packed bitmasks — the
+    delta a worker pushes back to the server (Alg 4 worker line 9).
+    ``packed_union(old, packed_delta(new, old)) == packed_union(old, new)``."""
+    return new & ~old
+
+
+def packed_union_delta(
+    new_masks: jax.Array,
+    old_masks: jax.Array,
+    *,
+    bw: int = 512,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (union, delta) over packed (k, W) int32 words.
+
+    Pads W to a multiple of ``bw`` and k to the int32 sublane height (both
+    lattice ops map zero words to zero words, so padding is exact), then
+    dispatches the Pallas kernel (interpret mode off-TPU) or the jnp
+    fallback.
+    """
+    if not use_kernel:
+        return new_masks | old_masks, new_masks & ~old_masks
+    if interpret is None:
+        interpret = not _on_tpu()
+    k, W = new_masks.shape
+    bw_ = min(bw, max(128, 128 * ((W + 127) // 128)))
+    pk = (-k) % 8
+    pw = (-W) % bw_
+    new_p = jnp.pad(new_masks, [(0, pk), (0, pw)])
+    old_p = jnp.pad(old_masks, [(0, pk), (0, pw)])
+    union, delta = packed_union_delta_kernel(new_p, old_p, bw=bw_,
+                                             interpret=interpret)
+    return union[:k, :W], delta[:k, :W]
 
 
 def _gather_row_cols(

@@ -106,6 +106,47 @@ def _select_kernel(nbr_ref, s_ref, retired_ref, order_ref, enabled_ref,
             cmin_ref[...] = c_sel
 
 
+def _union_delta_kernel(new_ref, old_ref, union_ref, delta_ref):
+    new = new_ref[...]
+    old = old_ref[...]
+    union_ref[...] = new | old
+    delta_ref[...] = new & ~old
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+def packed_union_delta_kernel(
+    new_masks: jax.Array,  # (k, W) int32 packed words, W % bw == 0
+    old_masks: jax.Array,  # (k, W) int32
+    *,
+    bw: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused lattice ops of the Alg-4 server line 9 on packed words:
+    union = new | old (the OR-merge) and delta = new & ~old (the worker's
+    delta-encoded push) in one VMEM pass over the word axis — the wire
+    format shared by the host simulation and the shard_map backend."""
+    k, W = new_masks.shape
+    grid = (W // bw,)
+    union, delta = pl.pallas_call(
+        _union_delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, bw), lambda w: (0, w)),
+            pl.BlockSpec((k, bw), lambda w: (0, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, bw), lambda w: (0, w)),
+            pl.BlockSpec((k, bw), lambda w: (0, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, W), jnp.int32),
+            jax.ShapeDtypeStruct((k, W), jnp.int32),
+        ],
+        interpret=interpret,
+    )(new_masks, old_masks)
+    return union, delta
+
+
 @functools.partial(jax.jit,
                    static_argnames=("greedy", "bw", "interpret"))
 def parsa_select_kernel(

@@ -28,7 +28,7 @@ def small_graph():
 # ------------------------------------------------------------- validation
 def test_registry_has_all_backends():
     assert {"host", "device_scan", "host_blocked_oracle",
-            "parallel_sim"} <= set(available_backends())
+            "parallel_sim", "parallel_device"} <= set(available_backends())
 
 
 @pytest.mark.parametrize("kwargs,match", [
@@ -43,6 +43,8 @@ def test_registry_has_all_backends():
     (dict(k=4, workers=0), "workers"),
     (dict(k=4, tau=-1), "tau"),
     (dict(k=4, global_init_frac=1.5), "global_init_frac"),
+    (dict(k=4, merge_every=0), "merge_every"),
+    (dict(k=4, devices=0), "devices"),
     (dict(k=4, sweeps=0), "sweeps"),
     (dict(k=4, placement=True, refine_v=False), "placement"),
 ])
@@ -68,6 +70,7 @@ def test_config_is_frozen_and_replaceable():
     ("device_scan", dict(block_size=64)),
     ("host_blocked_oracle", dict(block_size=64)),
     ("parallel_sim", dict(workers=4, tau=0)),
+    ("parallel_device", dict(workers=1, block_size=64, merge_every=2)),
 ])
 def test_backend_smoke_valid_partition_and_schema(small_graph, backend, extra):
     """Every backend yields a valid partition and the identical metrics /
@@ -87,6 +90,8 @@ def test_backend_smoke_valid_partition_and_schema(small_graph, backend, extra):
     assert {"partition_u", "partition_v", "metrics", "total"} <= set(res.timings)
     if backend == "parallel_sim":
         assert res.traffic is not None and res.traffic.tasks == 4
+    elif backend == "parallel_device":
+        assert res.traffic is not None and res.traffic.pulled_bytes > 0
     else:
         assert res.traffic is None
 
@@ -96,9 +101,10 @@ def test_neighbor_sets_cover_assigned_vertices(small_graph):
     from repro.core.costs import need_matrix
 
     g, k = small_graph, 4
-    for backend in ("host", "device_scan", "parallel_sim"):
+    for backend in ("host", "device_scan", "parallel_sim", "parallel_device"):
         res = partition(g, ParsaConfig(k=k, backend=backend, blocks=2,
-                                       block_size=64, refine_v=False))
+                                       block_size=64, workers=1,
+                                       refine_v=False))
         need = need_matrix(g, res.parts_u, k)
         assert not (need & ~res.neighbor_sets).any(), backend
 

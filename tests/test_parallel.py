@@ -39,6 +39,77 @@ def test_global_initialization_helps(small_ctr_graph):
     assert _quality(g, warm.parts_u, k) <= _quality(g, cold.parts_u, k) * 1.1
 
 
+def test_parallel_sim_w1_tau0_equals_host_backend(small_text_graph):
+    """Degenerate parity: one worker with no delay is the §4.2 sequential
+    subgraph stream — bit-identical parts and (packed) sets vs the host
+    backend at the same block count."""
+    from repro.api import ParsaConfig, partition
+    from repro.core.parallel import parallel_parsa_impl
+    from repro.kernels.parsa_cost import pack_bitmask
+
+    g, k, b = small_text_graph, 8, 8
+    host = partition(g, ParsaConfig(k=k, backend="host", blocks=b, seed=3,
+                                    refine_v=False))
+    rep, s_packed = parallel_parsa_impl(g, k, b=b, workers=1, tau=0, seed=3)
+    assert np.array_equal(rep.parts_u, host.parts_u)
+    assert np.array_equal(s_packed, pack_bitmask(host.neighbor_sets, g.num_v))
+    assert rep.stale_pushes_missed == 0
+
+
+def test_parallel_sim_server_stays_packed_no_dense_snapshot(small_text_graph):
+    """The satellite guarantee: the server state is packed words end to end
+    and the worker pull is handed to Alg 3 without a per-task dense copy —
+    the scratch partition_u_impl mutates IS the array it was given."""
+    import repro.core.parallel as par
+
+    g, k = small_text_graph, 8
+    adopted = []
+    real = par.partition_u_impl
+
+    def spy(sg, kk, init_sets=None, copy_init=True, **kw):
+        res = real(sg, kk, init_sets=init_sets, copy_init=copy_init, **kw)
+        adopted.append(res.neighbor_sets is init_sets)
+        return res
+
+    par.partition_u_impl = spy
+    try:
+        rep, s_packed = par.parallel_parsa_impl(g, k, b=4, a=2, workers=2,
+                                                tau=1, seed=0)
+    finally:
+        par.partition_u_impl = real
+    assert adopted and all(adopted)  # no dense snapshot between pull and run
+    assert s_packed.dtype == np.int32
+    assert s_packed.shape == (k, (g.num_v + 31) // 32)
+    assert (rep.parts_u >= 0).all()
+
+
+def test_parallel_sim_peak_memory_bounded():
+    """Allocation assertion: with the packed server state, peak incremental
+    memory stays near ONE dense (k, |V|) worker scratch — the old dense
+    server + per-task snapshot + Alg-3 copy (3×dense concurrent, plus dense
+    pending pushes) would blow this bound."""
+    import tracemalloc
+
+    from repro.core.parallel import parallel_parsa_impl
+    from repro.graphs import text_like
+
+    # k large enough that the dense (k, |V|) term dominates the
+    # k-independent per-subgraph CSC transients
+    g = text_like(300, 200_000, mean_len=10, seed=1)
+    k, b = 64, 4
+    dense_bytes = k * g.num_v  # one (k, |V|) bool scratch
+    parallel_parsa_impl(g, k, b=b, workers=2, tau=1, seed=0)  # warm imports
+    tracemalloc.start()
+    base = tracemalloc.get_traced_memory()[0]
+    parallel_parsa_impl(g, k, b=b, workers=2, tau=1, seed=0)
+    peak = tracemalloc.get_traced_memory()[1]
+    tracemalloc.stop()
+    # one pull scratch + pack transients ≈ 2×dense; the old layout held
+    # ≥ 3×dense concurrently (server + snapshot + Alg-3 copy) plus up to
+    # W+τ dense pending pushes in flight
+    assert peak - base < 2.5 * dense_bytes, (peak - base, dense_bytes)
+
+
 def test_blocked_jax_partitioner(small_text_graph):
     """TPU-native blocked greedy: balanced, complete, beats random."""
     g, k = small_text_graph, 8
