@@ -24,6 +24,7 @@ import numpy as np
 
 HW = {"peak": 197e12, "hbm": 819e9, "ici": 50e9}
 OUT = pathlib.Path(__file__).resolve().parent / "out"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRY = OUT / "dryrun"
 
 
@@ -41,6 +42,33 @@ def emit_parsa_bench(rows: list[dict], name: str = "BENCH_parsa",
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {path}")
     return path
+
+
+def emit_pipeline_bench(rows: list[dict],
+                        meta: dict | None = None) -> pathlib.Path:
+    """Per-phase wall-clock trajectory of the one-call ``partition()``
+    pipeline: repo-root ``BENCH_pipeline.json``.
+
+    Each row is one (backend, refine_backend, phase) cell with
+    ``wall_clock_s`` — phases are the ``PartitionResult.timings`` keys
+    (pack, partition_u, partition_v, metrics, total).  Lives at the repo
+    root (not benchmarks/out) so the cross-PR perf trajectory is tracked in
+    version control alongside the code that moved it; keys are append-only.
+    """
+    path = ROOT / "BENCH_pipeline.json"
+    payload = {"benchmark": "parsa_pipeline", **(meta or {}), "rows": rows}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path}")
+    return path
+
+
+def pipeline_phase_rows(res, backend: str, refine_backend: str) -> list[dict]:
+    """Flatten one PartitionResult's timings into BENCH_pipeline rows."""
+    return [
+        {"backend": backend, "refine_backend": refine_backend,
+         "phase": phase, "wall_clock_s": seconds}
+        for phase, seconds in sorted(res.timings.items())
+    ]
 
 SHAPE_INFO = {
     "train_4k": dict(kind="train", seq=4096, batch=256),

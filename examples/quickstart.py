@@ -47,6 +47,23 @@ print(" the paper's CTR runs cut inter-machine traffic by >90%)")
 print("\nphase timings:",
       {name: f"{dt * 1e3:.1f}ms" for name, dt in res.timings.items()})
 
+# the fully device-resident pipeline: partition U on device (one scan
+# dispatch), refine V on device (Algorithm 2 over packed words), measure on
+# device (popcount reductions) — no host round trip between phases, and
+# per-phase wall clocks in res.timings ("pack" is the host-side bitmask
+# packing, split out so "partition_u" is the scan alone).  A single cold
+# call includes jit compilation; steady-state numbers live in
+# benchmarks/bench_fig10_scalability.run_acceptance() → BENCH_pipeline.json.
+cfg_dev = ParsaConfig(k=k, backend="device_scan", refine_backend="device",
+                      seed=0)
+res_dev = partition(g, cfg_dev)
+assert res_dev.metrics.as_dict() == partition(
+    g, cfg_dev.replace(refine_backend="host")).metrics.as_dict()
+print("\ndevice-resident pipeline (device_scan + device refine/metrics, "
+      "bit-identical):")
+print("  phase timings:",
+      {name: f"{dt * 1e3:.1f}ms" for name, dt in res_dev.timings.items()})
+
 # warm-start / incremental repartitioning: tomorrow's graph reuses today's
 # neighbor sets with one method call (§4.4 incremental mode).
 g2 = text_like(num_docs=2000, vocab=6000, mean_len=50, seed=1)

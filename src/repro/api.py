@@ -63,6 +63,7 @@ __all__ = [
 ]
 
 _SELECTS = ("size", "footprint")
+_REFINE_BACKENDS = ("host", "device")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +102,10 @@ class ParsaConfig:
     # ---- composition
     refine_v: bool = True      # run Alg 2 (partition_v) after partition_u
     sweeps: int = 2            # Alg 2 re-assignment sweeps
+    refine_backend: str = "host"   # "host" = numpy oracle; "device" = the
+                               #   packed-word refine + metrics pipeline
+                               #   (bit-identical, O(1) dispatches/phase)
+    refine_chunk: int = 1024   # C: parameters swept per device chunk
     placement: bool = False    # also derive an embedding Placement
 
     def __post_init__(self):
@@ -137,6 +142,14 @@ class ParsaConfig:
                 f"devices must be >= 1 or None, got {self.devices}")
         if self.sweeps < 1:
             raise ValueError(f"sweeps must be >= 1, got {self.sweeps}")
+        if self.refine_backend not in _REFINE_BACKENDS:
+            raise ValueError(
+                f"refine_backend must be one of {_REFINE_BACKENDS}, got "
+                f"{self.refine_backend!r}")
+        if self.refine_chunk <= 0 or self.refine_chunk % 32 != 0:
+            raise ValueError(
+                f"refine_chunk must be a positive multiple of 32 (the packed "
+                f"word width), got {self.refine_chunk}")
         if self.placement and not self.refine_v:
             raise ValueError("placement=True requires refine_v=True "
                              "(the embedding layout needs parts_v)")
@@ -193,14 +206,21 @@ class PartitionResult:
                config: ParsaConfig | None = None) -> "PartitionResult":
         """Warm-start / incremental repartitioning: partition ``graph``
         seeding the neighbor sets from this result (§4.4 incremental mode)
-        instead of hand-threading ``init_sets``."""
+        instead of hand-threading ``init_sets``.
+
+        Hands over whichever neighbor-set view already exists: a device
+        backend's packed ``s_masks`` flow straight into the next run's
+        packed warm start (no dense (k, |V|) unpack), a host backend's
+        dense sets stay dense — every backend accepts both.
+        """
         if graph.num_v != self.num_v:
             raise ValueError(
                 f"refine() needs a graph over the same parameter side: "
                 f"result has num_v={self.num_v}, graph has "
                 f"num_v={graph.num_v}")
-        return partition(graph, config or self.config,
-                         init_sets=self.neighbor_sets)
+        sets = (self._packed_sets if self._packed_sets is not None
+                else self._dense_sets)
+        return partition(graph, config or self.config, init_sets=sets)
 
 
 def partition(
@@ -213,8 +233,17 @@ def partition(
 
     Phases: backend partition_u → optional Alg 2 V-refinement → exact
     metrics (objectives (4)/(6)/(7)) → optional embedding placement.  Each
-    phase's wall clock lands in ``result.timings``.  ``init_sets`` is the
-    internal warm-start hook — prefer ``PartitionResult.refine``.
+    phase's wall clock lands in ``result.timings``; device backends report
+    their host-side bitmask packing separately as ``timings["pack"]`` so
+    ``timings["partition_u"]`` is the scan alone.  ``init_sets`` is the
+    internal warm-start hook — prefer ``PartitionResult.refine``; both
+    dense (k, |V|) bool sets and packed (k, W) int32 words are accepted.
+
+    With ``config.refine_backend == "device"`` the V-refinement and the
+    metrics run on device over packed words (``core.jax_refine``),
+    consuming the backend's ``parts_u`` without a host round trip and
+    sharing one packed need matrix between the two phases — bit-identical
+    to the host oracles, O(1) XLA dispatches per phase.
     """
     backend = get_backend(config.backend)
     timings: dict[str, float] = {}
@@ -222,16 +251,60 @@ def partition(
 
     t0 = time.perf_counter()
     out: BackendOutput = backend(graph, config, init_sets=init_sets)
-    timings["partition_u"] = time.perf_counter() - t0
+    if hasattr(out.parts_u, "block_until_ready"):
+        # device-resident outputs: sync (no transfer) so phase attribution
+        # doesn't leak the async scan into the refine clock
+        out.parts_u.block_until_ready()
+    elapsed = time.perf_counter() - t0
+    pack_s = (out.timings or {}).get("pack")
+    if pack_s is not None:
+        timings["pack"] = pack_s
+        timings["partition_u"] = elapsed - pack_s
+    else:
+        timings["partition_u"] = elapsed
 
-    parts_v = None
+    on_device = config.refine_backend == "device"
+    parts_v = parts_v_dev = need_words = None
+    if on_device and init_sets is None and config.init_iters == 0 \
+            and config.global_init_frac == 0.0:
+        # Cold-start invariant: with no warm start and no §4.4 seeding,
+        # every backend's final S_i is EXACTLY N(U_i) (union of assigned
+        # vertices' neighborhoods), so the packed sets it already returned
+        # ARE the need matrix — the refine/metrics phases reuse them and
+        # skip the segment-OR need pack entirely.
+        import jax.numpy as jnp  # lazy: keep host-only paths jax-free
+
+        from .kernels.parsa_cost import coerce_packed_sets
+
+        # s_masks may already live on device — jnp.asarray keeps it there;
+        # only host backends' dense sets go through the packing coercion
+        need_words = (jnp.asarray(out.s_masks) if out.s_masks is not None
+                      else jnp.asarray(coerce_packed_sets(
+                          out.neighbor_sets, graph.num_v)))
     if config.refine_v:
         t0 = time.perf_counter()
-        parts_v = partition_v(graph, out.parts_u, config.k, sweeps=config.sweeps)
+        if on_device:
+            from .core.jax_refine import refine_v_device  # lazy: jax cost
+
+            parts_v_dev, need_words = refine_v_device(
+                graph, out.parts_u, config.k, sweeps=config.sweeps,
+                chunk=config.refine_chunk, use_kernel=config.use_kernel,
+                interpret=config.interpret, need_words=need_words)
+            parts_v_dev.block_until_ready()
+            parts_v = np.asarray(parts_v_dev)
+        else:
+            parts_v = partition_v(graph, np.asarray(out.parts_u), config.k,
+                                  sweeps=config.sweeps)
         timings["partition_v"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    metrics = evaluate(graph, out.parts_u, parts_v, config.k)
+    if on_device:
+        from .core.jax_refine import evaluate_device
+
+        metrics = evaluate_device(graph, out.parts_u, parts_v_dev, config.k,
+                                  need_words=need_words)
+    else:
+        metrics = evaluate(graph, np.asarray(out.parts_u), parts_v, config.k)
     timings["metrics"] = time.perf_counter() - t0
 
     placement = None

@@ -78,13 +78,20 @@ class BackendOutput:
 
     Exactly one of ``s_masks`` (packed (k, W) int32 bitmasks) or
     ``neighbor_sets`` (dense (k, |V|) bool) must be set; the facade packs /
-    lazily unpacks the other view.
+    lazily unpacks the other view.  Device backends may return ``parts_u``
+    and ``s_masks`` as *device* arrays (when the config asks for a device-
+    resident refine/metrics phase, ``refine_backend="device"``) — the facade
+    converts to numpy only at result assembly, so nothing round-trips
+    through the host between phases.  ``timings`` carries backend-internal
+    phase attribution (today: ``"pack"``, the host-side bitmask packing
+    seconds the facade splits out of ``timings["partition_u"]``).
     """
 
     parts_u: np.ndarray
     s_masks: np.ndarray | None = None
     neighbor_sets: np.ndarray | None = None
     traffic: TrafficCounters | None = None
+    timings: dict | None = None
 
 
 BackendFn = Callable[..., BackendOutput]
@@ -138,11 +145,14 @@ def host_backend(graph: BipartiteGraph, config, init_sets=None) -> BackendOutput
 @register_backend("device_scan")
 def device_scan_backend(graph: BipartiteGraph, config, init_sets=None) -> BackendOutput:
     """Device-resident blocked pipeline: one jitted scan, O(1) dispatches."""
+    timings: dict = {}
     parts_u, s_masks = blocked_partition_u_impl(
         graph, config.k, block=config.block_size, init_sets=init_sets,
         use_kernel=config.use_kernel, interpret=config.interpret,
-        seed=config.seed, cap=config.cap)
-    return BackendOutput(parts_u, s_masks=s_masks)
+        seed=config.seed, cap=config.cap,
+        as_numpy=getattr(config, "refine_backend", "host") != "device",
+        timings=timings)
+    return BackendOutput(parts_u, s_masks=s_masks, timings=timings)
 
 
 @register_backend("host_blocked_oracle")
@@ -196,10 +206,13 @@ def parallel_device_backend(graph: BipartiteGraph, config, init_sets=None) -> Ba
             graph, config.k, sample_frac=config.global_init_frac,
             theta=config.theta, select=config.select, seed=config.seed)
     workers = config.devices if config.devices is not None else config.workers
+    timings: dict = {}
     parts_u, s_masks, traffic = parallel_blocked_partition_u_impl(
         graph, config.k, workers=workers, block=config.block_size,
         merge_every=config.merge_every, init_sets=init_sets,
         use_kernel=config.use_kernel, interpret=config.interpret,
-        seed=config.seed, cap=config.cap)
+        seed=config.seed, cap=config.cap,
+        as_numpy=getattr(config, "refine_backend", "host") != "device",
+        timings=timings)
     return BackendOutput(parts_u, s_masks=s_masks,
-                         traffic=TrafficCounters(**traffic))
+                         traffic=TrafficCounters(**traffic), timings=timings)

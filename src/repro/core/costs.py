@@ -4,6 +4,12 @@ Conventions: ``parts_u[i] ∈ [0,k)`` assigns example u_i to worker
 ``parts_u[i]``; ``parts_v[j] ∈ [0,k)`` (or -1 = unassigned/isolated) assigns
 parameter v_j to server ``parts_v[j]``.  Machine m hosts worker m + server m
 (§2.4, Fig 4).
+
+``need_matrix`` / ``evaluate`` (including ``parts_v=None``) are the host
+*parity oracles* for the packed-word device implementations
+(``core.jax_refine.need_masks`` / ``evaluate_device``), which are pinned
+bit-equal to them in ``tests/test_refine.py`` — the device path never
+materializes this dense (k, |V|) bool matrix.
 """
 from __future__ import annotations
 

@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import time
 import warnings
 from typing import NamedTuple
 
@@ -72,6 +73,7 @@ import numpy as np
 
 from ..kernels.parsa_cost import (
     BIG,
+    coerce_packed_sets,
     pack_bitmask,
     pack_bitmask_csr_sparse,
     parsa_cost,
@@ -459,6 +461,8 @@ def blocked_partition_u_impl(
     interpret: bool | None = None,
     seed: int = 0,
     cap: int = 48,
+    as_numpy: bool = True,
+    timings: dict | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Device-resident blocked greedy partition.
     Returns (parts_u, final packed s_masks (k, W) int32).
@@ -470,16 +474,26 @@ def blocked_partition_u_impl(
     stack — O(1) XLA dispatches per call.  The final neighbor-set bitmasks
     come back with the scan carry, so the device path supports warm-start /
     incremental repartitioning with full parity to the host path.
+
+    ``init_sets`` may be dense (k, |V|) bool or already-packed (k, W) int32
+    words (the ``PartitionResult.s_masks`` fast path — no dense detour).
+    ``as_numpy=False`` keeps both outputs as device arrays so the V-refine
+    and metrics phases can consume them without a host round trip.
+    A ``timings`` dict, when given, receives the host-side ``"pack"``
+    seconds so the facade can report packing separately from the scan.
     """
+    t_pack = time.perf_counter()
     W = (graph.num_v + 31) // 32
     if init_sets is None:
         s_masks = jnp.zeros((k, W), jnp.int32)
     else:
-        s_masks = jnp.asarray(pack_bitmask(np.asarray(init_sets, bool), graph.num_v))
+        s_masks = jnp.asarray(coerce_packed_sets(init_sets, graph.num_v))
     sizes = jnp.zeros((k,), jnp.int32)
     rng = np.random.default_rng(seed)
     order = rng.permutation(graph.num_u)
     packed = pack_graph_blocks(graph, block, order=order, cap=cap)
+    if timings is not None:
+        timings["pack"] = time.perf_counter() - t_pack
     _count_dispatch("partition_scan")
     parts_blocks, s_out, _ = _partition_scan(
         jnp.asarray(packed.valid), jnp.asarray(packed.widx),
@@ -487,6 +501,11 @@ def blocked_partition_u_impl(
         jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
         s_masks, sizes,
         k=k, use_kernel=use_kernel, interpret=interpret)
+    if not as_numpy:
+        flat = parts_blocks.reshape(-1)[: graph.num_u]
+        parts = jnp.zeros((graph.num_u,), jnp.int32).at[
+            jnp.asarray(order)].set(flat)
+        return parts, s_out
     flat = np.asarray(parts_blocks).reshape(-1)[: graph.num_u]
     parts = np.full(graph.num_u, -1, np.int32)
     parts[order] = flat
@@ -539,7 +558,7 @@ def blocked_partition_u_hostloop_impl(
     if init_sets is None:
         s_masks = jnp.zeros((k, W), jnp.int32)
     else:
-        s_masks = jnp.asarray(pack_bitmask(np.asarray(init_sets, bool), graph.num_v))
+        s_masks = jnp.asarray(coerce_packed_sets(init_sets, graph.num_v))
     sizes = jnp.zeros((k,), jnp.int32)
     rng = np.random.default_rng(seed)
     order = rng.permutation(graph.num_u)
@@ -688,6 +707,8 @@ def parallel_blocked_partition_u_impl(
     seed: int = 0,
     cap: int = 48,
     devices: tuple | None = None,
+    as_numpy: bool = True,
+    timings: dict | None = None,
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Device-parallel Algorithm 4: shard_map multi-worker Parsa.
 
@@ -726,12 +747,12 @@ def parallel_blocked_partition_u_impl(
             f"XLA_FLAGS=--xla_force_host_platform_device_count={workers} "
             f"before importing jax")
     devices = tuple(devices[:workers])
+    t_pack = time.perf_counter()
     W = (graph.num_v + 31) // 32
     if init_sets is None:
         s_masks = jnp.zeros((k, W), jnp.int32)
     else:
-        s_masks = jnp.asarray(
-            pack_bitmask(np.asarray(init_sets, bool), graph.num_v))
+        s_masks = jnp.asarray(coerce_packed_sets(init_sets, graph.num_v))
     sizes = jnp.zeros((k,), jnp.int32)
     rng = np.random.default_rng(seed)
     order = rng.permutation(graph.num_u)
@@ -745,15 +766,14 @@ def parallel_blocked_partition_u_impl(
     def shard(x):
         return jnp.asarray(x.reshape((workers, nb_per) + x.shape[1:]))
 
+    if timings is not None:
+        timings["pack"] = time.perf_counter() - t_pack
     fn = _parallel_scan_fn(devices, k, merge_every, use_kernel, interpret)
     _count_dispatch("parallel_partition_scan")
     parts_blocks, s_out, _, pushed_words = fn(
         shard(packed.valid), shard(packed.widx), shard(packed.vals),
         shard(packed.trunc), shard(packed.tr_ids), shard(packed.tr_masks),
         s_masks, sizes)
-    flat = np.asarray(parts_blocks).reshape(-1)[: graph.num_u]
-    parts = np.full(graph.num_u, -1, np.int32)
-    parts[order] = flat
     n_super = nb_per // merge_every
     traffic = {
         "pushed_bytes": 4 * int(pushed_words),
@@ -761,6 +781,14 @@ def parallel_blocked_partition_u_impl(
         "tasks": workers * n_super,
         "stale_pushes_missed": n_super * workers * (workers - 1),
     }
+    if not as_numpy:
+        flat = parts_blocks.reshape(-1)[: graph.num_u]
+        parts = jnp.zeros((graph.num_u,), jnp.int32).at[
+            jnp.asarray(order)].set(flat)
+        return parts, s_out, traffic
+    flat = np.asarray(parts_blocks).reshape(-1)[: graph.num_u]
+    parts = np.full(graph.num_u, -1, np.int32)
+    parts[order] = flat
     return parts, np.asarray(s_out), traffic
 
 

@@ -1,0 +1,327 @@
+r"""Device-resident Algorithm 2 + packed-bitmask metrics (paper §3.2, §2.4).
+
+PRs 1 and 3 made ``partition_u`` device-resident; this module does the same
+for the remaining phases of the one-call pipeline, all over the packed
+uint32 wire format those PRs standardized:
+
+  * ``need_masks``     — the u_ij matrix of eq. (8) as packed (k, W) words,
+    built on device straight from ``parts_u`` + the CSR edge array in one
+    sorted segment-OR pass.  No dense (k, |V|) bool array ever exists.
+  * ``refine_v_device``— Algorithm 2's greedy sweep over V as ONE jitted
+    ``lax.scan`` over chunks of C parameters with donated (cost, parts_v)
+    carries.  Within a chunk the PR 1 rounds trick applies: parameter picks
+    whose reads see no earlier in-chunk cost write commute, so a chunk whose
+    prefix write-sets stay clear of every later parameter's needer set
+    commits in one vectorized pass (the common case once the sweep has
+    converged); any interference trips a sequential in-chunk ``lax.scan``
+    that replays the host oracle step-for-step — bit-identical either way
+    (property-tested against ``core.partition_v``).  ``use_kernel=True``
+    swaps the chunk body for the fused cost-update Pallas kernel
+    (``kernels/parsa_cost/select.py:refine_sweep_kernel``), which runs the
+    whole chunk sweep inside VMEM.
+  * ``evaluate_device``— objectives (4)/(6)/(7) as ``population_count``
+    reductions over packed words: footprint = popcount(need_i), the
+    worker/server overlap terms via the (k, k) packed intersection matrix
+    M[i, j] = |V_i ∩ N(U_j)|.  Exact — bit-equal to ``core.costs.evaluate``.
+
+Cost-update algebra mirrored from the host oracle (Alg 2 line 8):
+
+    assign  j → ξ : cost_ξ  += −1 + (n_j − 1)            (n_j = Σ_i u_ij)
+    retract j from cur (sweep ≥ 2): cost_cur −= −1 + (n_j − u_{cur,j})
+
+A converged sweep retracts and re-adds the same amount at the same index,
+so the chunk-prefix write vector stays zero and the vectorized fast path
+commits — extra sweeps after convergence are free of the sequential tail,
+matching the host loop's early ``break`` bit-for-bit.
+
+Dispatch model: one ``need_pack`` launch (sort + scatter), one
+``refine_scan`` launch for ALL sweeps × chunks, one ``metrics`` launch —
+O(1) per phase, observed by ``jax_partition.dispatch_counter``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.parsa_cost import BIG, refine_sweep_chunk, refine_sweep_ref
+from .bipartite import BipartiteGraph
+from .costs import PartitionMetrics
+from .jax_partition import _count_dispatch
+
+__all__ = ["need_masks", "refine_v_device", "evaluate_device"]
+
+# Largest k²·W int32 transient (words) the metrics intersection matrix may
+# materialize in one broadcast; larger problems reduce row-by-row instead.
+_M_BCAST_MAX_WORDS = 1 << 26  # 256 MB
+
+
+# --------------------------------------------------------------------------
+# need_matrix as packed words, on device.
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "num_v", "W"))
+def _need_masks_scatter(
+    parts_u: jax.Array,    # (|U|,) int32
+    edge_rows: jax.Array,  # (E,) int32/int64 — source row of each edge
+    cols: jax.Array,       # (E,) int32 — V column of each edge
+    *,
+    k: int,
+    num_v: int,
+    W: int,
+) -> jax.Array:
+    """One segment-OR pass: sort the (partition, column) keys, keep each
+    distinct key's first occurrence, scatter-add its bit.  Distinct keys in
+    the same word carry distinct bits, so add ≡ OR; duplicate keys add 0.
+
+    Keys are ``partition · num_v + column`` — int32 unless x64 is enabled,
+    so k · num_v must stay below 2³¹ (e.g. |V| ≤ 33M at k = 64); flip
+    ``jax_enable_x64`` for the regime beyond that.
+    """
+    kd = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    edge_part = parts_u[edge_rows].astype(kd)
+    key = edge_part * num_v + cols.astype(kd)
+    key = jnp.sort(key)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), key[1:] != key[:-1]])
+    part = (key // num_v).astype(jnp.int32)
+    col = (key % num_v).astype(jnp.int32)
+    bit = jnp.left_shift(jnp.int32(1), col & 31)
+    flat = part * W + (col >> 5)
+    words = jnp.zeros((k * W,), jnp.int32).at[flat].add(
+        jnp.where(first, bit, 0))
+    return words.reshape(k, W)
+
+
+def need_masks(
+    graph: BipartiteGraph,
+    parts_u: np.ndarray | jax.Array,
+    k: int,
+) -> jax.Array:
+    """(k, W) int32 packed need matrix: bit j of row i ⇔ v_j ∈ N(U_i).
+
+    Device analogue of ``core.costs.need_matrix`` — same bits, packed
+    little-endian per 32-column word (``pack_bitmask`` layout), computed
+    without materializing the dense bool matrix.  Accepts ``parts_u`` as a
+    device array (no host round trip for device backends).
+    """
+    W = (graph.num_v + 31) // 32
+    if graph.num_edges == 0:
+        return jnp.zeros((k, W), jnp.int32)
+    edge_rows = np.repeat(
+        np.arange(graph.num_u, dtype=np.int64), np.diff(graph.u_indptr))
+    _count_dispatch("need_pack")
+    return _need_masks_scatter(
+        jnp.asarray(parts_u, dtype=jnp.int32), jnp.asarray(edge_rows),
+        jnp.asarray(graph.u_indices, dtype=jnp.int32),
+        k=k, num_v=graph.num_v, W=W)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 as one jitted chunked scan.
+# --------------------------------------------------------------------------
+def _chunk_sweep_jnp(
+    tile_words: jax.Array,  # (k, cw) int32 packed need bits of this chunk
+    tile: jax.Array,    # (k, C) int32 0/1 — the same bits, expanded
+    nneed: jax.Array,   # (C,) int32 — Σ_i u_ij per in-chunk parameter
+    prev: jax.Array,    # (C,) int32 — parameter assignments entering the sweep
+    cost: jax.Array,    # (k,) int32 — carried Alg 2 cost vector
+    *,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """One chunk of the greedy sweep.  Returns (cost', parts_chunk).
+
+    Fast path: pretend every in-chunk parameter reads the chunk-entry cost
+    snapshot (own retraction applied), pick all C argmins in one pass, and
+    commit iff no parameter's needer set intersects the *prefix* of earlier
+    picks'/retractions' cost writes — then the snapshot picks ARE the
+    sequential picks.  A converged sweep writes net zero everywhere, so its
+    chunks all commit vectorized.  Any interference falls back to the exact
+    per-parameter oracle (``refine_sweep_ref`` — the same program the
+    Pallas kernel is pinned to, so the Alg 2 step algebra lives in one
+    place).
+    """
+    C = tile.shape[1]
+    iota_c = jnp.arange(C, dtype=jnp.int32)
+    needers = tile.T.astype(bool)                      # (C, k)
+    active = nneed > 0
+    cur_safe = jnp.where(prev >= 0, prev, 0)
+    bit_cur = tile[cur_safe, iota_c]                   # u_{cur,j}
+    # retraction delta applied at prev[j] (0 when unassigned)
+    retract = jnp.where(prev >= 0, 1 - nneed + bit_cur, 0)   # (C,)
+    onehot_cur = (jnp.arange(k, dtype=jnp.int32)[None, :] == prev[:, None])
+    # snapshot costs with each row's own retraction folded in
+    adj = cost[None, :] + jnp.where(onehot_cur, retract[:, None], 0)
+    masked = jnp.where(needers, adj, BIG)              # (C, k)
+    xi0 = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    xi_safe = jnp.where(active, xi0, 0)
+    assign = jnp.where(active, nneed - 2, 0)           # −1 + (n_j − 1)
+    # per-parameter write vectors and their exclusive prefix sums
+    w = jnp.zeros((C, k), jnp.int32)
+    w = w.at[iota_c, cur_safe].add(retract)
+    w = w.at[iota_c, xi_safe].add(assign)
+    prefix = jnp.cumsum(w, axis=0) - w                 # exclusive
+    clean = ~((prefix != 0) & needers).any()
+
+    def fast(_):
+        return cost + w.sum(axis=0), jnp.where(active, xi0, -1)
+
+    def slow(_):
+        return refine_sweep_ref(tile_words, prev, cost)
+
+    return jax.lax.cond(clean, fast, slow, None)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "sweeps", "cw", "use_kernel", "interpret"),
+    donate_argnums=(1, 2),
+)
+def _refine_scan(
+    need_pad: jax.Array,  # (k, Wp) int32, Wp % cw == 0
+    cost: jax.Array,      # (k,) int32 — donated; |N(U_i)| at entry
+    parts: jax.Array,     # (n_chunks, C) int32 — donated; -1 at entry
+    *,
+    k: int,
+    sweeps: int,
+    cw: int,
+    use_kernel: bool,
+    interpret: bool | None,
+) -> tuple[jax.Array, jax.Array]:
+    """All Alg 2 sweeps as one dispatch: scan chunks, carry (cost, parts).
+    Returns (cost, parts (n_chunks, C)) aliasing the donated inputs."""
+    Wp = need_pad.shape[1]
+    n_chunks = Wp // cw
+    words = need_pad.reshape(k, n_chunks, cw).transpose(1, 0, 2)
+    shifts = jnp.arange(32, dtype=jnp.int32)
+    C = cw * 32
+
+    def per_chunk(cost, xs):
+        tile_words, prev = xs                          # (k, cw), (C,)
+        if use_kernel:
+            return refine_sweep_chunk(tile_words, prev, cost,
+                                      interpret=interpret)
+        tile = ((tile_words[:, :, None] >> shifts) & 1).reshape(k, C)
+        nneed = tile.sum(axis=0, dtype=jnp.int32)
+        return _chunk_sweep_jnp(tile_words, tile, nneed, prev, cost, k=k)
+
+    for _ in range(sweeps):
+        cost, parts = jax.lax.scan(per_chunk, cost, (words, parts))
+    return cost, parts
+
+
+def refine_v_device(
+    graph: BipartiteGraph,
+    parts_u: np.ndarray | jax.Array,
+    k: int,
+    sweeps: int = 1,
+    chunk: int = 1024,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
+    need_words: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Device-resident Algorithm 2.  Returns (parts_v (|V|,) int32 device
+    array, need_words (k, W) int32) — the latter so ``evaluate_device``
+    reuses the packed need matrix instead of recomputing it.
+
+    Bit-identical to ``core.partition_v(graph, parts_u, k, sweeps)`` for any
+    sweep count (the host loop's early convergence break is a fixed point of
+    the device sweep, so running all ``sweeps`` is exact), including the
+    isolated-parameter −1 convention.  The whole refinement — every sweep,
+    every chunk — is ONE XLA dispatch after the need pack.
+
+    Range limit: costs are carried as int32 and masked with ``BIG`` = 2³⁰
+    (the host oracle uses int64), so every true cost — bounded by
+    |N(U_i)| + Σ_j (n_j − 2) ≤ nnz(need) ≤ k·|V| — must stay below 2³⁰;
+    beyond that (the extreme end of the 10⁸-parameter regime at high k) a
+    capped needer could tie with masked non-needers and diverge from the
+    oracle.  Widen the carry to int64 (x64 mode) before trusting parity
+    there.
+    """
+    if chunk <= 0 or chunk % 32:
+        raise ValueError(f"chunk must be a positive multiple of 32, got {chunk}")
+    if need_words is None:
+        need_words = need_masks(graph, parts_u, k)
+    W = (graph.num_v + 31) // 32
+    cw = chunk // 32
+    Wp = -(-W // cw) * cw
+    need_pad = jnp.pad(need_words, [(0, 0), (0, Wp - W)])
+    n_chunks = Wp // cw
+    cost0 = jax.lax.population_count(need_words).astype(jnp.int32).sum(axis=1)
+    parts0 = jnp.full((n_chunks, chunk), -1, jnp.int32)
+    _count_dispatch("refine_scan")
+    _, parts_v = _refine_scan(need_pad, cost0, parts0, k=k, sweeps=sweeps,
+                              cw=cw, use_kernel=use_kernel, interpret=interpret)
+    return parts_v.reshape(-1)[: graph.num_v], need_words
+
+
+# --------------------------------------------------------------------------
+# Objectives (4)/(6)/(7) as popcount reductions over packed words.
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "num_v", "W", "have_pv"))
+def _metrics_popcount(
+    need_w: jax.Array,   # (k, W) int32
+    parts_u: jax.Array,  # (|U|,) int32
+    parts_v: jax.Array,  # (|V|,) int32 (ignored when have_pv=False)
+    *,
+    k: int,
+    num_v: int,
+    W: int,
+    have_pv: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    sizes = jnp.zeros((k,), jnp.int32).at[parts_u].add(1)
+    pc = jax.lax.population_count(need_w).astype(jnp.int32)
+    footprint = pc.sum(axis=1)
+    if not have_pv:
+        return sizes, footprint, footprint, jnp.zeros((k,), jnp.int32)
+    # pack parts_v → (k, W) server-ownership words (row k catches the -1s)
+    iota_v = jnp.arange(num_v, dtype=jnp.int32)
+    row = jnp.where(parts_v >= 0, parts_v, k)
+    bit = jnp.left_shift(jnp.int32(1), iota_v & 31)
+    v_words = jnp.zeros((k + 1, W), jnp.int32).at[row, iota_v >> 5].add(bit)[:k]
+    # M[i, j] = |V_i ∩ N(U_j)| — the only V/U overlap term the objectives
+    # need.  The one-shot (k, k, W) broadcast is fastest but k× larger than
+    # the dense need matrix this module exists to avoid, so past a 256 MB
+    # transient (k²·W words, static at trace time) fall back to row-by-row
+    # — one (k, W) temp per server.
+    if k * k * W <= _M_BCAST_MAX_WORDS:
+        M = jax.lax.population_count(
+            v_words[:, None, :] & need_w[None, :, :]).astype(jnp.int32).sum(-1)
+    else:
+        M = jax.lax.map(
+            lambda vw: jax.lax.population_count(
+                vw[None, :] & need_w).astype(jnp.int32).sum(-1),
+            v_words)
+    local = jnp.diagonal(M)                 # |V_i ∩ N(U_i)|
+    worker = footprint - local              # |N(U_i) \ V_i|
+    server = M.sum(axis=1) - local          # Σ_{j≠i} |V_i ∩ N(U_j)|
+    return sizes, footprint, worker, server
+
+
+def evaluate_device(
+    graph: BipartiteGraph,
+    parts_u: np.ndarray | jax.Array,
+    parts_v: np.ndarray | jax.Array | None,
+    k: int,
+    need_words: jax.Array | None = None,
+) -> PartitionMetrics:
+    """Objectives (4)/(6)/(7), bit-equal to ``core.costs.evaluate``, from
+    packed words only.  Pass ``need_words`` (e.g. from ``refine_v_device``)
+    to skip recomputing the need pack; metrics themselves are one dispatch.
+    """
+    if need_words is None:
+        need_words = need_masks(graph, parts_u, k)
+    W = (graph.num_v + 31) // 32
+    _count_dispatch("metrics")
+    have_pv = parts_v is not None
+    pv = (jnp.asarray(parts_v, dtype=jnp.int32) if have_pv
+          else jnp.zeros((graph.num_v,), jnp.int32))
+    sizes, footprint, worker, server = _metrics_popcount(
+        need_words, jnp.asarray(parts_u, dtype=jnp.int32), pv,
+        k=k, num_v=graph.num_v, W=W, have_pv=have_pv)
+    sizes, footprint, worker, server = (
+        np.asarray(x).astype(np.int64) for x in (sizes, footprint, worker,
+                                                 server))
+    return PartitionMetrics(k, sizes, footprint, worker + server,
+                            worker, server)

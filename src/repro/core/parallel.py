@@ -37,7 +37,12 @@ import warnings
 
 import numpy as np
 
-from ..kernels.parsa_cost import pack_bitmask, packed_delta, packed_union
+from ..kernels.parsa_cost import (
+    coerce_packed_sets,
+    pack_bitmask,
+    packed_delta,
+    packed_union,
+)
 from .bipartite import BipartiteGraph
 from .costs import need_matrix
 from .partition_u import partition_u_impl
@@ -108,10 +113,13 @@ def parallel_parsa_impl(
     rng = np.random.default_rng(seed + 1)
 
     # server state is packed words, end to end; no dense copy of it exists
+    # .copy(): coerce returns already-packed input as-is (zero-copy view),
+    # but the server merges pushes into S_server in place — never through
+    # the caller's warm-start buffer (e.g. a PartitionResult's s_masks)
     S_server = (
         np.zeros((k, W_words), dtype=np.int32)
         if init_sets is None
-        else pack_bitmask(np.asarray(init_sets, dtype=bool), num_v)
+        else coerce_packed_sets(init_sets, num_v).copy()
     )
     parts_u = np.full(graph.num_u, -1, dtype=np.int32)
     pushed_words = pulled_words = missed = 0

@@ -76,9 +76,17 @@ def partition_u_impl(
     ``copy_init=False`` adopts ``init_sets`` as the working S and mutates it
     in place — callers that already materialized a private dense scratch
     (e.g. the Alg 4 worker pull in ``parallel.py``) skip the per-call
-    (k, |V|) copy.
+    (k, |V|) copy.  ``init_sets`` may also arrive packed ((k, W) int32
+    words, e.g. ``PartitionResult.s_masks``); it is unpacked into a fresh
+    scratch either way.
     """
     num_u, num_v = graph.num_u, graph.num_v
+    if init_sets is not None and not (
+            isinstance(init_sets, np.ndarray) and init_sets.dtype == np.bool_
+            and init_sets.shape == (k, num_v)):
+        from ..kernels.parsa_cost import coerce_dense_sets
+
+        init_sets = coerce_dense_sets(init_sets, num_v)
     if init_sets is None:
         S = np.zeros((k, num_v), dtype=bool)
     elif copy_init:

@@ -10,6 +10,14 @@ minimum cost; the cost update is
 other needing partition).  Repeated sweeps re-assign one variable at a time
 and, by convexity + total unimodularity, converge to a global optimum in a
 finite number of sweeps (§3.2).
+
+This numpy loop is the *parity oracle*: the device-resident implementation
+(``core.jax_refine.refine_v_device`` — the ``refine_backend="device"``
+facade path, one jitted chunked scan over the packed need words) is pinned
+bit-identical to it for every sweep count in ``tests/test_refine.py``,
+including the isolated-parameter −1 convention and the early convergence
+break (a converged sweep is a fixed point, so the device path simply runs
+all sweeps).
 """
 from __future__ import annotations
 

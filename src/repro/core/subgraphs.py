@@ -84,11 +84,12 @@ def sequential_parsa_impl(
     from a previous run).
     """
     plan = divide(graph, b, seed=seed)
-    S = (
-        np.zeros((k, graph.num_v), dtype=bool)
-        if init_sets is None
-        else np.asarray(init_sets, dtype=bool).copy()
-    )
+    if init_sets is None:
+        S = np.zeros((k, graph.num_v), dtype=bool)
+    else:
+        from ..kernels.parsa_cost import coerce_dense_sets
+
+        S = coerce_dense_sets(init_sets, graph.num_v).copy()
 
     # ---- individual initialization: partition, then RESET S to the fresh
     # neighbor sets and drop assignments (§4.4).

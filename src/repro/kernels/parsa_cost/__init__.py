@@ -1,4 +1,6 @@
 from .ops import (  # noqa: F401
+    coerce_dense_sets,
+    coerce_packed_sets,
     compact_row_words,
     pack_bitmask,
     pack_bitmask_csr,
@@ -9,6 +11,7 @@ from .ops import (  # noqa: F401
     packed_union_delta,
     parsa_cost,
     parsa_cost_select,
+    refine_sweep_chunk,
     unpack_bitmask,
 )
 from .ref import (  # noqa: F401
@@ -16,6 +19,8 @@ from .ref import (  # noqa: F401
     parsa_cost_ref,
     parsa_select_greedy_ref,
     parsa_select_ref,
+    refine_sweep_ref,
     select_from_cost,
     select_greedy_from_cost,
 )
+from .select import refine_sweep_kernel  # noqa: F401

@@ -11,8 +11,13 @@ from .ref import (
     parsa_cost_ref,
     parsa_select_greedy_ref,
     parsa_select_ref,
+    refine_sweep_ref,
 )
-from .select import packed_union_delta_kernel, parsa_select_kernel
+from .select import (
+    packed_union_delta_kernel,
+    parsa_select_kernel,
+    refine_sweep_kernel,
+)
 
 
 def _on_tpu() -> bool:
@@ -53,6 +58,45 @@ def unpack_bitmask(masks: np.ndarray, num_v: int) -> np.ndarray:
     bits = np.unpackbits(
         masks.view(np.uint8).reshape(rows, W * 4), axis=-1, bitorder="little")
     return bits[:, :num_v].view(np.bool_)
+
+
+def coerce_packed_sets(sets, num_v: int) -> np.ndarray:
+    """Normalize neighbor sets to the packed (k, ⌈num_v/32⌉) int32 wire
+    format.  Accepts packed int32/uint32 words (returned as-is, no copy),
+    a dense (k, num_v) bool membership matrix, or anything castable to one
+    — so warm starts can hand ``PartitionResult.s_masks`` straight to a
+    device backend without a dense round trip."""
+    W = (num_v + 31) // 32
+    a = np.asarray(sets)
+    if a.ndim != 2:
+        raise ValueError(f"neighbor sets must be 2-D, got shape {a.shape}")
+    if a.dtype != np.bool_ and np.issubdtype(a.dtype, np.integer) \
+            and a.shape[1] == W and a.shape[1] != num_v:
+        return a.view(np.int32) if a.dtype == np.uint32 else \
+            a.astype(np.int32, copy=False)
+    if a.shape[1] != num_v:
+        raise ValueError(
+            f"neighbor sets width {a.shape[1]} matches neither num_v="
+            f"{num_v} (dense) nor {W} packed words")
+    return pack_bitmask(a.astype(bool, copy=False), num_v)
+
+
+def coerce_dense_sets(sets, num_v: int) -> np.ndarray:
+    """Inverse normalization: dense (k, num_v) bool view of neighbor sets
+    handed in either format (packed input is unpacked into a fresh,
+    writable scratch)."""
+    W = (num_v + 31) // 32
+    a = np.asarray(sets)
+    if a.ndim != 2:
+        raise ValueError(f"neighbor sets must be 2-D, got shape {a.shape}")
+    if a.dtype != np.bool_ and np.issubdtype(a.dtype, np.integer) \
+            and a.shape[1] == W and a.shape[1] != num_v:
+        return unpack_bitmask(a, num_v)
+    if a.shape[1] != num_v:
+        raise ValueError(
+            f"neighbor sets width {a.shape[1]} matches neither num_v="
+            f"{num_v} (dense) nor {W} packed words")
+    return a.astype(bool, copy=False)
 
 
 def packed_union(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -96,6 +140,38 @@ def packed_union_delta(
     union, delta = packed_union_delta_kernel(new_p, old_p, bw=bw_,
                                              interpret=interpret)
     return union[:k, :W], delta[:k, :W]
+
+
+def refine_sweep_chunk(
+    tile_words: jax.Array,  # (k, cw) int32 packed need bits of one V chunk
+    prev: jax.Array,        # (C,) int32 entering assignments, C == 32·cw
+    cost: jax.Array,        # (k,) int32 Alg 2 cost vector
+    *,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused Algorithm 2 chunk sweep → (cost' (k,), parts (C,)).
+
+    Pads k to the int32 sublane height with zero need words (a padding
+    partition needs nothing, so it is never picked and its cost row is
+    sliced away) and dispatches the Pallas kernel (interpret mode off-TPU)
+    or the jnp oracle.  Lane alignment of ``cw`` is the caller's choice —
+    use 32·cw ≥ 4096 chunks for real-TPU runs.
+    """
+    k, cw = tile_words.shape
+    C = cw * 32
+    if not use_kernel:
+        cost_out, parts = refine_sweep_ref(tile_words, prev, cost)
+        return cost_out, parts
+    if interpret is None:
+        interpret = not _on_tpu()
+    pk = (-k) % 8
+    words_p = jnp.pad(tile_words, [(0, pk), (0, 0)])
+    cost_p = jnp.pad(cost, [(0, pk)])
+    parts, cost_out = refine_sweep_kernel(
+        words_p, prev.reshape(1, C), cost_p.reshape(1, k + pk),
+        interpret=interpret)
+    return cost_out[0, :k], parts[0]
 
 
 def _gather_row_cols(

@@ -101,6 +101,37 @@ def select_greedy_from_cost(
     return jax.lax.cond(collide, slow, fast, None)
 
 
+def refine_sweep_ref(
+    tile_words: jax.Array,  # (k, cw) int32 — packed need bits of one V chunk
+    prev: jax.Array,        # (C,) int32 — assignments entering the sweep (C = 32·cw)
+    cost: jax.Array,        # (k,) int32 — Alg 2 cost vector at chunk entry
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential oracle for the fused refine-sweep kernel: one Algorithm 2
+    greedy chunk, parameter by parameter.  Returns (cost', parts (C,)).
+
+    Exact Alg 2 line-8 algebra: assign j→ξ adds −1 + (n_j − 1) at ξ;
+    re-assignment (``prev[j] ≥ 0``) first retracts −1 + (n_j − u_{cur,j})
+    at the old host.  Parameters nobody needs stay −1 and touch nothing.
+    The Pallas kernel in ``select.py`` must match this bit-for-bit.
+    """
+    k, cw = tile_words.shape
+    shifts = jnp.arange(32, dtype=jnp.int32)
+    tile = ((tile_words[:, :, None] >> shifts) & 1).reshape(k, cw * 32)
+    nneed = tile.sum(axis=0, dtype=jnp.int32)
+
+    def step(c, xs):
+        bits_col, nj, cur = xs
+        cs = jnp.where(cur >= 0, cur, 0)
+        c = c.at[cs].add(jnp.where(cur >= 0, 1 - nj + bits_col[cs], 0))
+        masked = jnp.where(bits_col > 0, c, BIG)
+        xi = jnp.argmin(masked).astype(jnp.int32)
+        act = nj > 0
+        c = c.at[jnp.where(act, xi, 0)].add(jnp.where(act, nj - 2, 0))
+        return c, jnp.where(act, xi, -1)
+
+    return jax.lax.scan(step, cost, (tile.T, nneed, prev))
+
+
 def parsa_select_ref(nbr_masks, s_masks, retired):
     """Fused cost+select oracle, independent mode → ((k,) mins, (k,) argmins)."""
     return select_from_cost(parsa_cost_ref(nbr_masks, s_masks), retired)

@@ -29,6 +29,12 @@ VMEM budget per step (B=1024, bw=512, k≤64):
     per-k temp 1024×512×4 = 2 MiB  (inside the unrolled k loop)
   ≈ 4.4 MiB — inside the ~16 MiB VMEM of a v5e core.  bw is a multiple of
   128 (lane width); B a multiple of 8 (int32 sublane).
+
+This file also hosts the other fused lattice kernels of the pipeline:
+``packed_union_delta_kernel`` (Alg 4 server merge wire ops) and
+``refine_sweep_kernel`` (the Algorithm 2 cost-update sweep of one V chunk —
+bit tile, cost vector, and parts row all VMEM-resident; ≈ (k + 33·32)·cw·4
+bytes ≪ VMEM for cw=128 chunks at k≤64).
 """
 from __future__ import annotations
 
@@ -104,6 +110,76 @@ def _select_kernel(nbr_ref, s_ref, retired_ref, order_ref, enabled_ref,
                                                 unroll=True)
             umin_ref[...] = u_sel
             cmin_ref[...] = c_sel
+
+
+def _refine_sweep_kernel(words_ref, prev_ref, cost_ref,
+                         parts_ref, cost_out_ref):
+    """Fused Algorithm 2 cost-update: sweep one V chunk entirely in VMEM.
+
+    words (k, cw) int32 packed need bits; prev (1, C) int32 entering
+    assignments (C = 32·cw); cost (1, k) int32.  Emits (parts (1, C),
+    cost' (1, k)).  The (k, C) bit tile is expanded once from the packed
+    words and the C greedy steps run as a fori_loop over VMEM state — the
+    tile, the cost vector, and the growing parts row never leave the core.
+    Bit-exact vs ``ref.refine_sweep_ref``.
+    """
+    k, cw = words_ref.shape
+    C = cw * 32
+    words = words_ref[...]
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 32), 2)
+    bits = ((words[:, :, None] >> shifts) & 1).reshape(k, C)   # (k, C)
+    nneed = bits.sum(axis=0, dtype=jnp.int32).reshape(1, C)
+    prev = prev_ref[...]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    iota_kc = jax.lax.broadcasted_iota(jnp.int32, (k, 1), 0)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+
+    def step(j, carry):
+        cost, parts = carry                                    # (1,k), (1,C)
+        bcol = jax.lax.dynamic_slice(bits, (0, j), (k, 1))     # (k, 1)
+        nj = jax.lax.dynamic_slice(nneed, (0, j), (1, 1))[0, 0]
+        cur = jax.lax.dynamic_slice(prev, (0, j), (1, 1))[0, 0]
+        # retract j's old contribution: cost_cur −= −1 + (n_j − u_{cur,j})
+        bitc = jnp.sum(jnp.where(iota_kc == cur, bcol, 0))
+        retract = jnp.where(cur >= 0, 1 - nj + bitc, 0)
+        cost = cost + jnp.where(iota_k == cur, retract, 0)
+        # pick the needing partition with minimum cost (first on ties)
+        masked = jnp.where(jnp.transpose(bcol) > 0, cost, BIG)  # (1, k)
+        m = jnp.min(masked)
+        xi = jnp.min(jnp.where(masked == m, iota_k, k))
+        act = nj > 0
+        # line 8: cost_ξ += −1 + (n_j − 1)
+        cost = cost + jnp.where((iota_k == xi) & act, nj - 2, 0)
+        parts = jnp.where(iota_c == j, jnp.where(act, xi, -1), parts)
+        return cost, parts
+
+    cost0 = cost_ref[...]
+    parts0 = jnp.full((1, C), -1, jnp.int32)
+    cost, parts = jax.lax.fori_loop(0, C, step, (cost0, parts0))
+    parts_ref[...] = parts
+    cost_out_ref[...] = cost
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def refine_sweep_kernel(
+    tile_words: jax.Array,  # (k, cw) int32, k % 8 == 0
+    prev: jax.Array,        # (1, C) int32, C == 32·cw
+    cost: jax.Array,        # (1, k) int32
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (parts (1, C), cost' (1, k)) int32 — see ``_refine_sweep_kernel``."""
+    k, cw = tile_words.shape
+    C = cw * 32
+    parts, cost_out = pl.pallas_call(
+        _refine_sweep_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, C), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_words, prev, cost)
+    return parts, cost_out
 
 
 def _union_delta_kernel(new_ref, old_ref, union_ref, delta_ref):

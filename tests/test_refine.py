@@ -1,0 +1,343 @@
+"""Device-resident Algorithm 2 + packed-bitmask metrics (core.jax_refine):
+bit-exact parity with the host oracles (core.partition_v / core.costs),
+the fused refine-sweep Pallas kernel, the facade's ``refine_backend``
+device flow, and the O(1)-dispatch invariant of the full pipeline."""
+import numpy as np
+import pytest
+
+from repro.api import ParsaConfig, partition
+from repro.core.bipartite import from_edges
+from repro.core.costs import evaluate, need_matrix
+from repro.core.jax_partition import dispatch_counter
+from repro.core.jax_refine import evaluate_device, need_masks, refine_v_device
+from repro.core.partition_u import partition_u_impl
+from repro.core.partition_v import partition_v
+from repro.graphs import text_like
+from repro.kernels.parsa_cost import pack_bitmask
+
+
+def _random_graph(rng, nu, nv, ne, isolate_frac=0.0):
+    """Random bipartite graph; ``isolate_frac`` reserves a tail of V that no
+    edge may touch, so the Alg 2 isolated-parameter −1 convention is hit."""
+    hi = max(1, int(nv * (1 - isolate_frac)))
+    eu = rng.integers(0, nu, size=ne)
+    ev = rng.integers(0, hi, size=ne)
+    return from_edges(nu, nv, eu, ev)
+
+
+# ------------------------------------------------------------ need_masks
+@pytest.mark.parametrize("k", [4, 16, 64])
+def test_need_masks_matches_packed_need_matrix(k):
+    rng = np.random.default_rng(k)
+    g = _random_graph(rng, 300, 700, 4000, isolate_frac=0.1)
+    parts_u = rng.integers(0, k, size=g.num_u).astype(np.int32)
+    got = np.asarray(need_masks(g, parts_u, k))
+    want = pack_bitmask(need_matrix(g, parts_u, k), g.num_v)
+    assert np.array_equal(got, want)
+
+
+def test_need_masks_empty_graph():
+    g = from_edges(5, 70, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    got = np.asarray(need_masks(g, np.zeros(5, np.int32), 4))
+    assert got.shape == (4, 3) and not got.any()
+
+
+# ------------------------------------------------- partition_v parity
+@pytest.mark.parametrize("sweeps", [1, 2, 4])
+@pytest.mark.parametrize("k", [4, 16])
+def test_refine_v_device_bit_identical(k, sweeps):
+    """Acceptance: device Alg 2 == host Alg 2 for every sweep count,
+    including the isolated-parameter −1 case and ragged chunk tails."""
+    rng = np.random.default_rng(17 * k + sweeps)
+    g = _random_graph(rng, 400, 777, 6000, isolate_frac=0.15)
+    parts_u = partition_u_impl(g, k, seed=1).parts_u
+    want = partition_v(g, parts_u, k, sweeps=sweeps)
+    got, _ = refine_v_device(g, parts_u, k, sweeps=sweeps, chunk=128)
+    assert np.array_equal(np.asarray(got), want)
+    assert (want == -1).any()  # the isolated tail is actually exercised
+
+
+def test_refine_v_device_k64_and_chunk_sizes():
+    rng = np.random.default_rng(5)
+    g = _random_graph(rng, 500, 1500, 9000, isolate_frac=0.05)
+    parts_u = rng.integers(0, 64, size=g.num_u).astype(np.int32)
+    want = partition_v(g, parts_u, 64, sweeps=2)
+    for chunk in (32, 256, 2048):
+        got, _ = refine_v_device(g, parts_u, 64, sweeps=2, chunk=chunk)
+        assert np.array_equal(np.asarray(got), want), chunk
+
+
+def test_refine_v_device_converged_sweeps_are_fixed_point():
+    """Host breaks out of converged sweeps; device runs them all — results
+    must still agree (a converged sweep is a no-op on (cost, parts))."""
+    g = text_like(300, 600, mean_len=15, seed=0)
+    parts_u = partition_u_impl(g, 8).parts_u
+    want = partition_v(g, parts_u, 8, sweeps=4)   # converged by sweep 4
+    assert np.array_equal(want, partition_v(g, parts_u, 8, sweeps=5))
+    got, _ = refine_v_device(g, parts_u, 8, sweeps=6, chunk=256)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_refine_v_device_rejects_bad_chunk():
+    g = text_like(50, 100, mean_len=5, seed=0)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        refine_v_device(g, np.zeros(50, np.int32), 4, chunk=48)
+
+
+# --------------------------------------------------- fused Pallas kernel
+def test_refine_sweep_kernel_matches_ref_interpret():
+    """The fused cost-update kernel is bit-exact vs the jnp oracle across
+    shapes, including re-assignment sweeps (prev ≥ 0) and empty columns."""
+    import jax.numpy as jnp
+
+    from repro.kernels.parsa_cost import refine_sweep_chunk, refine_sweep_ref
+
+    rng = np.random.default_rng(0)
+    for k, cw in [(4, 2), (8, 4), (16, 2), (32, 1)]:
+        C = cw * 32
+        words = rng.integers(0, 2**31, size=(k, cw), dtype=np.int64) \
+            .astype(np.int32)
+        words[:, -1] &= rng.integers(0, 2**16, dtype=np.int64)  # empty cols
+        bits = ((words[:, :, None] >> np.arange(32)) & 1).reshape(k, C)
+        prev = np.full(C, -1, np.int32)
+        for j in range(C):  # a consistent partial previous assignment
+            nz = np.flatnonzero(bits[:, j])
+            if nz.size and rng.random() < 0.6:
+                prev[j] = rng.choice(nz)
+        cost = rng.integers(0, 500, k).astype(np.int32)
+        c_ref, p_ref = refine_sweep_ref(
+            jnp.asarray(words), jnp.asarray(prev), jnp.asarray(cost))
+        c_ker, p_ker = refine_sweep_chunk(
+            jnp.asarray(words), jnp.asarray(prev), jnp.asarray(cost),
+            use_kernel=True, interpret=True)
+        assert np.array_equal(np.asarray(c_ref), np.asarray(c_ker)), (k, cw)
+        assert np.array_equal(np.asarray(p_ref), np.asarray(p_ker)), (k, cw)
+
+
+def test_refine_v_device_kernel_path_parity():
+    rng = np.random.default_rng(3)
+    g = _random_graph(rng, 250, 400, 3000, isolate_frac=0.1)
+    parts_u = partition_u_impl(g, 8).parts_u
+    want = partition_v(g, parts_u, 8, sweeps=2)
+    got, _ = refine_v_device(g, parts_u, 8, sweeps=2, chunk=64,
+                             use_kernel=True, interpret=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+# --------------------------------------------------------- metrics parity
+@pytest.mark.parametrize("k", [4, 16, 64])
+def test_evaluate_device_bit_equal(k):
+    rng = np.random.default_rng(k + 1)
+    g = _random_graph(rng, 350, 900, 5000, isolate_frac=0.1)
+    parts_u = rng.integers(0, k, size=g.num_u).astype(np.int32)
+    parts_v = partition_v(g, parts_u, k, sweeps=2)
+    mh = evaluate(g, parts_u, parts_v, k)
+    md = evaluate_device(g, parts_u, parts_v, k)
+    for field in ("sizes", "footprint", "traffic", "worker_recv",
+                  "server_send"):
+        assert np.array_equal(getattr(mh, field), getattr(md, field)), field
+    assert mh.as_dict() == md.as_dict()
+
+
+def test_evaluate_device_rowmap_branch_bit_equal(monkeypatch):
+    """The large-k²W row-by-row intersection path (no (k, k, W) broadcast)
+    is bit-equal too.  Fresh shapes force a retrace under the patched
+    threshold (the branch is chosen at trace time)."""
+    import repro.core.jax_refine as jr
+
+    monkeypatch.setattr(jr, "_M_BCAST_MAX_WORDS", 0)
+    rng = np.random.default_rng(11)
+    g = _random_graph(rng, 333, 901, 5000, isolate_frac=0.1)  # unseen shape
+    parts_u = rng.integers(0, 16, size=g.num_u).astype(np.int32)
+    parts_v = partition_v(g, parts_u, 16, sweeps=2)
+    mh = evaluate(g, parts_u, parts_v, 16)
+    md = evaluate_device(g, parts_u, parts_v, 16)
+    assert mh.as_dict() == md.as_dict()
+    assert np.array_equal(mh.traffic, md.traffic)
+
+
+def test_evaluate_device_parts_v_none_matches_host():
+    g = text_like(300, 600, mean_len=15, seed=2)
+    parts_u = partition_u_impl(g, 8).parts_u
+    mh = evaluate(g, parts_u, None, 8)
+    md = evaluate_device(g, parts_u, None, 8)
+    assert mh.as_dict() == md.as_dict()
+    assert np.array_equal(mh.traffic, md.traffic)
+
+
+# ----------------------------------------------------- hypothesis property
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([4, 16, 64]),
+           sweeps=st.integers(1, 3))
+    @settings(max_examples=25, deadline=None)
+    def test_property_device_refine_and_metrics_bit_equal(seed, k, sweeps):
+        rng = np.random.default_rng(seed)
+        g = _random_graph(rng, int(rng.integers(5, 80)),
+                          int(rng.integers(5, 150)),
+                          int(rng.integers(1, 500)),
+                          isolate_frac=float(rng.random() * 0.3))
+        parts_u = rng.integers(0, k, size=g.num_u).astype(np.int32)
+        want_v = partition_v(g, parts_u, k, sweeps=sweeps)
+        got_v, nw = refine_v_device(g, parts_u, k, sweeps=sweeps, chunk=64)
+        assert np.array_equal(np.asarray(got_v), want_v)
+        mh = evaluate(g, parts_u, want_v, k)
+        md = evaluate_device(g, parts_u, got_v, k, need_words=nw)
+        assert mh.as_dict() == md.as_dict()
+        assert np.array_equal(mh.traffic, md.traffic)
+
+
+# ------------------------------------------------------------- facade flow
+@pytest.mark.parametrize("backend,extra", [
+    ("host", {}),
+    ("device_scan", dict(block_size=64)),
+    ("parallel_sim", dict(workers=4, tau=0)),
+    ("parallel_device", dict(workers=1, block_size=64, merge_every=2)),
+    # init_iters / global_init_frac leave S_i ⊋ N(U_i), so these two pin
+    # the gating of the cold-start s_masks-as-need shortcut
+    ("host", dict(init_iters=2)),
+    ("parallel_sim", dict(workers=2, tau=0, global_init_frac=0.2)),
+])
+def test_partition_refine_backend_device_parity(backend, extra):
+    """The one-call pipeline with refine_backend="device" is bit-identical
+    to the host pipeline for every backend — parts, metrics, and sets."""
+    g = text_like(500, 900, mean_len=15, seed=9)
+    base = ParsaConfig(k=8, backend=backend, blocks=4, sweeps=2, **extra)
+    rh = partition(g, base)
+    rd = partition(g, base.replace(refine_backend="device"))
+    assert np.array_equal(rh.parts_u, rd.parts_u)
+    assert np.array_equal(rh.parts_v, rd.parts_v)
+    assert rh.metrics.as_dict() == rd.metrics.as_dict()
+    assert np.array_equal(rh.metrics.traffic, rd.metrics.traffic)
+    assert np.array_equal(rh.s_masks, rd.s_masks)
+
+
+def test_full_pipeline_o1_dispatches():
+    """Acceptance: the fully device-resident pipeline (scan → refine →
+    metrics) issues O(1) XLA pipeline launches per phase.  Cold starts
+    reuse the scan's own s_masks as the need matrix (zero need_pack
+    launches); warm starts pay exactly one segment-OR need pack."""
+    g = text_like(600, 1100, mean_len=12, seed=1)
+    cfg = ParsaConfig(k=8, backend="device_scan", block_size=64,
+                      refine_backend="device")
+    warm = partition(g, cfg)  # warm the jitted pipelines
+    with dispatch_counter() as counts:
+        partition(g, cfg)
+    assert counts == {"partition_scan": 1,
+                      "refine_scan": 1, "metrics": 1}, counts
+    partition(g, cfg, init_sets=warm.s_masks)  # warm the need-pack jit
+    with dispatch_counter() as counts:
+        partition(g, cfg, init_sets=warm.s_masks)
+    assert counts == {"partition_scan": 1, "need_pack": 1,
+                      "refine_scan": 1, "metrics": 1}, counts
+
+
+def test_pack_timing_split_for_device_backends():
+    g = text_like(300, 500, mean_len=10, seed=0)
+    res = partition(g, ParsaConfig(k=4, backend="device_scan", block_size=64))
+    assert "pack" in res.timings and res.timings["pack"] >= 0
+    assert res.timings["partition_u"] >= 0
+    res_h = partition(g, ParsaConfig(k=4, backend="host"))
+    assert "pack" not in res_h.timings  # host backends do not pack
+
+
+def test_refine_backend_validation():
+    with pytest.raises(ValueError, match="refine_backend"):
+        ParsaConfig(k=4, refine_backend="gpu")
+    with pytest.raises(ValueError, match="refine_chunk"):
+        ParsaConfig(k=4, refine_chunk=100)
+
+
+# -------------------------------------------------- packed warm-start path
+def test_partition_accepts_packed_init_sets_all_backends():
+    """partition(init_sets=packed) == partition(init_sets=dense) for host
+    and device backends — the warm-start fast path never densifies."""
+    g1 = text_like(400, 800, mean_len=12, seed=3)
+    g2 = text_like(300, 800, mean_len=12, seed=4)
+    for backend, extra in [("host", {}), ("device_scan", dict(block_size=64)),
+                           ("parallel_sim", dict(workers=2, tau=0))]:
+        cfg = ParsaConfig(k=8, backend=backend, blocks=2, **extra)
+        r1 = partition(g1, cfg)
+        dense = partition(g2, cfg, init_sets=r1.neighbor_sets)
+        packed = partition(g2, cfg, init_sets=r1.s_masks)
+        assert np.array_equal(dense.parts_u, packed.parts_u), backend
+        assert np.array_equal(dense.s_masks, packed.s_masks), backend
+
+
+def test_packed_warm_start_never_mutates_caller_sets():
+    """Regression: backends must not OR their updates into the caller's
+    packed warm-start buffer (parallel_sim's server merges in place)."""
+    g1 = text_like(400, 800, mean_len=12, seed=3)
+    g2 = text_like(300, 800, mean_len=12, seed=4)
+    for backend, extra in [("parallel_sim", dict(workers=2, tau=0)),
+                           ("device_scan", dict(block_size=64)),
+                           ("host", {})]:
+        cfg = ParsaConfig(k=8, backend=backend, blocks=2, **extra)
+        r1 = partition(g1, cfg)
+        before = r1.s_masks.copy()
+        partition(g2, cfg, init_sets=r1.s_masks)
+        assert np.array_equal(r1.s_masks, before), backend
+
+
+def test_result_refine_uses_native_view():
+    """refine() hands over whichever set view the backend produced — the
+    packed view for device backends (no dense unpack), dense for host —
+    and both give bit-identical warm-started results."""
+    g1 = text_like(400, 800, mean_len=12, seed=3)
+    g2 = text_like(300, 800, mean_len=12, seed=4)
+    cfg = ParsaConfig(k=8, backend="device_scan", block_size=64)
+    r1 = partition(g1, cfg)
+    assert r1._dense_sets is None          # packed-native result
+    r2 = r1.refine(g2)
+    assert r1._dense_sets is None          # refine() did NOT force an unpack
+    want = partition(g2, cfg, init_sets=r1.neighbor_sets)
+    assert np.array_equal(r2.parts_u, want.parts_u)
+    assert np.array_equal(r2.s_masks, want.s_masks)
+
+
+def test_multidevice_parallel_device_device_refine_subprocess():
+    """The 8-virtual-device path end to end in ONE process: parallel_device
+    partition_u → device refine → device metrics, bit-equal to the host
+    refine/metrics of the same parts_u, O(1) dispatches per phase."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env.update(
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=str(root / "src"),
+    )
+    script = r"""
+import jax, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+from repro.graphs import text_like
+from repro.api import ParsaConfig, partition
+from repro.core.jax_partition import dispatch_counter
+
+g = text_like(1200, 2000, mean_len=15, seed=4)
+cfg = ParsaConfig(k=8, backend="parallel_device", workers=8, merge_every=2,
+                  block_size=64, sweeps=2, refine_backend="device", seed=0)
+partition(g, cfg)  # warm
+with dispatch_counter() as counts:
+    res = partition(g, cfg)
+assert counts == {"partition_scan": 0, "parallel_partition_scan": 1,
+                  "refine_scan": 1, "metrics": 1}, counts
+ref = partition(g, cfg.replace(refine_backend="host"))
+assert np.array_equal(res.parts_v, ref.parts_v)
+assert res.metrics.as_dict() == ref.metrics.as_dict()
+print("REFINE_8DEV_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "REFINE_8DEV_OK" in out.stdout, out.stdout + out.stderr
