@@ -1,0 +1,141 @@
+"""Streaming Parsa acceptance: online ``feed()`` vs from-scratch repartition.
+
+The PR 5 acceptance run (``run_acceptance()``): the 100k×65k text graph
+arrives in 16 chunks (k=16, CPU host) and we compare, per chunk,
+
+  * ``StreamSession.feed(chunk)``   — one scan dispatch against the live
+    packed server sets (O(chunk) work, O(1) dispatches, asserted); vs
+  * repartitioning the whole prefix graph from scratch with the
+    ``device_scan`` backend at every arrival (O(stream) work) — what a
+    system without streaming state would have to do.
+
+Asserts: mean per-chunk ``feed`` ≥ ``min_speedup``× faster than the mean
+from-scratch repartition (both warmed, scope-equal pack+scan wall clock);
+the final streamed partition's ``traffic_max`` within ``max_quality_pct``%
+of a one-shot ``device_scan`` partition of the full graph; the one-chunk
+degenerate feed bit-identical to ``device_scan``.  Per-chunk rows land in
+``benchmarks/out/stream_bench.csv`` and the repo-root
+``BENCH_pipeline.json`` (``report.emit_stream_bench``).
+
+``run()`` is the CI-scale variant: same assertions (minus the wall-clock
+floor, noisy on shared runners) on a small graph.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import ParsaConfig, ParsaStreamConfig, StreamSession, partition
+from repro.core.jax_partition import dispatch_counter
+from repro.graphs import text_like
+
+from .common import emit, score
+from .report import emit_stream_bench
+
+
+def _feed_wall(upd) -> float:
+    # scope-equal to the scratch runs: host packing + the scan itself
+    return upd.timings["pack"] + upd.timings["partition_u"]
+
+
+def _scratch_wall(res) -> float:
+    return res.timings["pack"] + res.timings["partition_u"]
+
+
+def run(scale: float = 1.0, k: int = 8, chunks: int = 8,
+        min_speedup: float | None = None,
+        max_quality_pct: float | None = 5.0):
+    """CI-scale streaming benchmark (same shape as the acceptance run)."""
+    return run_acceptance(
+        n_u=int(12_000 * scale), num_v=int(16_384 * scale), k=k,
+        chunks=chunks, block=128, min_speedup=min_speedup,
+        max_quality_pct=max_quality_pct, name="stream_bench_quick")
+
+
+def run_acceptance(n_u: int = 100_000, num_v: int = 65_536, k: int = 16,
+                   chunks: int = 16, block: int = 256,
+                   min_speedup: float | None = 5.0,
+                   max_quality_pct: float | None = 5.0,
+                   name: str = "stream_bench"):
+    g = text_like(n_u, num_v, mean_len=20, seed=0)
+    base = ParsaConfig(k=k, backend="device_scan", block_size=block,
+                       refine_v=False, seed=0)
+    scfg = ParsaStreamConfig(base=base, repartition="never")
+    bounds = np.linspace(0, n_u, chunks + 1).astype(int)
+    chunk_graphs = [g.slice_u(int(bounds[i]), int(bounds[i + 1]))
+                    for i in range(chunks)]
+
+    # ---- one-shot baseline (warmed) + degenerate one-chunk parity
+    partition(g, base)
+    one_shot = partition(g, base)
+    sess_parity = StreamSession(scfg, num_v=num_v)
+    sess_parity.feed(g)
+    assert np.array_equal(sess_parity.parts, one_shot.parts_u), \
+        "one-chunk feed is not bit-identical to device_scan"
+    assert np.array_equal(sess_parity.arena.masks_np(), one_shot.s_masks)
+    print(f"# one-chunk degenerate parity: bit-identical "
+          f"({n_u} vertices, k={k})")
+
+    # ---- warm the chunk-shaped feed scan, then time a fresh stream
+    warm = StreamSession(scfg, num_v=num_v)
+    for cg in chunk_graphs:
+        warm.feed(cg)
+    sess = StreamSession(scfg, num_v=num_v)
+    feeds = []
+    for cg in chunk_graphs:
+        with dispatch_counter() as counts:
+            upd = sess.feed(cg)
+        assert counts["stream_feed_scan"] == 1, counts
+        assert counts["stream_metrics"] == 1, counts
+        feeds.append(upd)
+
+    # ---- from-scratch repartition of every prefix (each shape warmed)
+    scratch_s = []
+    for i in range(chunks):
+        prefix = g.slice_u(0, int(bounds[i + 1]))
+        partition(prefix, base)              # warm this prefix's shapes
+        scratch_s.append(_scratch_wall(partition(prefix, base)))
+
+    rows = []
+    for i, upd in enumerate(feeds):
+        f, s = _feed_wall(upd), scratch_s[i]
+        rows.append({
+            "chunk": i, "num_u_chunk": int(bounds[i + 1] - bounds[i]),
+            "num_u_total": int(bounds[i + 1]), "feed_s": f,
+            "scratch_s": s, "speedup_vs_scratch": s / f,
+            "traffic_max": int(upd.metrics.traffic_max),
+        })
+    mean_feed = float(np.mean([r["feed_s"] for r in rows]))
+    mean_scratch = float(np.mean(scratch_s))
+    speedup = mean_scratch / mean_feed
+
+    # ---- final quality vs the one-shot partition (full objectives)
+    streamed = score(g, sess.parts, k)["traffic_max"]
+    baseline = score(g, one_shot.parts_u, k)["traffic_max"]
+    quality_pct = (streamed - baseline) / baseline * 100
+    emit(rows, name)
+    emit_stream_bench(rows, meta={
+        "graph": f"text_like({n_u}x{num_v})", "k": k, "chunks": chunks,
+        "block_size": block, "mean_feed_s": mean_feed,
+        "mean_scratch_s": mean_scratch, "speedup_vs_scratch": speedup,
+        "quality_vs_one_shot_pct": quality_pct})
+    print(f"# mean feed {mean_feed:.3f}s vs mean from-scratch "
+          f"{mean_scratch:.3f}s = {speedup:.1f}x; final traffic_max "
+          f"{streamed} vs one-shot {baseline} ({quality_pct:+.2f}%)")
+    if max_quality_pct is not None:
+        assert quality_pct <= max_quality_pct, (
+            f"streamed traffic_max {quality_pct:+.2f}% vs one-shot "
+            f"(limit {max_quality_pct}%)")
+    if min_speedup is not None:
+        assert speedup >= min_speedup, (
+            f"feed only {speedup:.1f}x vs from-scratch (need "
+            f"≥{min_speedup}x; rerun on an idle box if contended)")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--acceptance" in sys.argv:
+        run_acceptance()
+    else:
+        run()

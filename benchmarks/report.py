@@ -57,8 +57,39 @@ def emit_pipeline_bench(rows: list[dict],
     """
     path = ROOT / "BENCH_pipeline.json"
     payload = {"benchmark": "parsa_pipeline", **(meta or {}), "rows": rows}
+    if path.exists():
+        # preserve the streaming benchmark's section (written by
+        # emit_stream_bench) — the two emitters own disjoint keys
+        old = json.loads(path.read_text())
+        for key in ("stream_rows", "stream_meta"):
+            if key in old:
+                payload.setdefault(key, old[key])
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {path}")
+    return path
+
+
+def emit_stream_bench(rows: list[dict],
+                      meta: dict | None = None) -> pathlib.Path:
+    """Append the streaming benchmark's per-chunk rows to the repo-root
+    ``BENCH_pipeline.json`` trajectory.
+
+    Each row is one fed chunk (``chunk``, ``feed_s``, ``scratch_s``,
+    ``speedup_vs_scratch``, ``traffic_max`` …).  The pipeline payload's
+    existing keys are preserved (append-only schema): stream rows land
+    under ``stream_rows`` / ``stream_meta`` so re-runs replace rather than
+    duplicate them, and a missing file is created with an empty pipeline
+    section.
+    """
+    path = ROOT / "BENCH_pipeline.json"
+    if path.exists():
+        payload = json.loads(path.read_text())
+    else:
+        payload = {"benchmark": "parsa_pipeline", "rows": []}
+    payload["stream_rows"] = rows
+    payload["stream_meta"] = meta or {}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path} (+{len(rows)} stream rows)")
     return path
 
 

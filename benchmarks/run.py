@@ -17,8 +17,8 @@ def main() -> None:
 
     from . import (bench_embedding_traffic, bench_fig7_vary_k,
                    bench_fig8_subgraphs, bench_fig9_global_init,
-                   bench_fig10_scalability, bench_kernels, bench_table2,
-                   bench_table34_dbpg)
+                   bench_fig10_scalability, bench_kernels, bench_stream,
+                   bench_table2, bench_table34_dbpg)
 
     suites = {
         "table2": lambda: bench_table2.run(scale=scale),
@@ -29,6 +29,7 @@ def main() -> None:
         "table34": lambda: bench_table34_dbpg.run(scale=scale),
         "embedding": lambda: bench_embedding_traffic.run(),
         "kernels": lambda: bench_kernels.run(scale=scale),
+        "stream": lambda: bench_stream.run(scale=scale),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -60,7 +60,29 @@ __all__ = [
     "partition",
     "register_backend",
     "available_backends",
+    # streaming surface (lazy — see __getattr__)
+    "ParsaStreamConfig",
+    "StreamSession",
+    "StreamUpdate",
+    "stream_partition",
 ]
+
+# Streaming lives in ``repro.stream`` (online incremental Parsa over
+# growing graphs) but is surfaced here so the facade stays the one import:
+#     from repro.api import ParsaStreamConfig, stream_partition
+# Loaded lazily to keep `import repro.api` free of the stream module's
+# device-state machinery until it is actually used (and to avoid the
+# stream → api → stream import cycle at module load).
+_STREAM_EXPORTS = ("ParsaStreamConfig", "StreamSession", "StreamUpdate",
+                   "stream_partition")
+
+
+def __getattr__(name: str):
+    if name in _STREAM_EXPORTS:
+        from . import stream
+
+        return getattr(stream, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 _SELECTS = ("size", "footprint")
 _REFINE_BACKENDS = ("host", "device")

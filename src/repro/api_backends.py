@@ -71,6 +71,18 @@ class TrafficCounters:
     tasks: int = 0
     stale_pushes_missed: int = 0   # pushes invisible to a pull due to delay
 
+    def __add__(self, other: "TrafficCounters") -> "TrafficCounters":
+        """Component-wise accumulation — streaming sessions sum per-feed
+        and migration counters into one session total (same units, so the
+        sum is meaningful)."""
+        if not isinstance(other, TrafficCounters):
+            return NotImplemented
+        return TrafficCounters(
+            self.pushed_bytes + other.pushed_bytes,
+            self.pulled_bytes + other.pulled_bytes,
+            self.tasks + other.tasks,
+            self.stale_pushes_missed + other.stale_pushes_missed)
+
 
 @dataclasses.dataclass
 class BackendOutput:

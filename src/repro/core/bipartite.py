@@ -84,6 +84,20 @@ class BipartiteGraph:
             indices[indptr[out_i] : indptr[out_i + 1]] = self.neighbors(int(u))
         return BipartiteGraph(len(u_ids), self.num_v, indptr, indices)
 
+    def slice_u(self, start: int, stop: int) -> "BipartiteGraph":
+        """Contiguous U-row slice ``[start, stop)`` with global V ids —
+        vectorized (no per-vertex loop), the chunking primitive of the
+        streaming pipeline: ``g.slice_u(a, b)`` is what a stream fed rows
+        a..b of ``g`` would have received as one chunk."""
+        if not 0 <= start <= stop <= self.num_u:
+            raise ValueError(
+                f"slice [{start}, {stop}) out of range for num_u={self.num_u}")
+        lo, hi = self.u_indptr[start], self.u_indptr[stop]
+        return BipartiteGraph(
+            stop - start, self.num_v,
+            (self.u_indptr[start : stop + 1] - lo).astype(np.int64),
+            self.u_indices[lo:hi])
+
     # --------------------------------------------------------------- io
     def save_npz(self, path: str | pathlib.Path) -> None:
         np.savez_compressed(

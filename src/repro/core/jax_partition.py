@@ -93,6 +93,7 @@ __all__ = [
     "PackedBlocks",
     "dispatch_counter",
     "reset_dispatch_counts",
+    "resolve_worker_devices",
 ]
 
 # Dispatch accounting: one entry per *host→device pipeline launch*;
@@ -158,12 +159,20 @@ def pack_graph_blocks(
     block: int,
     order: np.ndarray | None = None,
     cap: int = 48,
+    tb_pad: int | None = None,
 ) -> PackedBlocks:
     """Pack all of U (in ``order``) into padded (n_blocks, B, …) stacks.
 
     Fully vectorized: one CSR gather + one sorted pass over the edge array
     yields the compact word lists and the truncated-row side channel.  No
     per-vertex Python work, and no dense (n, W) array on the host.
+
+    ``tb_pad`` rounds the truncated-row side-channel width TB up to the
+    next power of two ≥ max(TB, tb_pad).  Padding entries carry
+    ``tr_ids == B`` (dropped on device), so the output is bit-equivalent —
+    the point is shape stability: streaming feeds re-pack same-sized chunks
+    whose natural TB jitters with the data, and a stable TB keeps every
+    feed on the already-compiled scan.
     """
     n = graph.num_u
     if order is None:
@@ -184,6 +193,9 @@ def pack_graph_blocks(
     t_block = t_rows // block
     t_counts = np.bincount(t_block, minlength=n_blocks)
     TB = max(1, int(t_counts.max()) if t_rows.size else 1)
+    if tb_pad is not None:
+        TB = max(TB, tb_pad)
+        TB = 1 << (TB - 1).bit_length()
     tr_ids = np.full((n_blocks, TB), block, np.int32)    # block == dropped
     tr_masks = np.zeros((n_blocks, TB, W), np.int32)
     if t_rows.size:
@@ -695,6 +707,79 @@ def _parallel_scan_fn(devices, k: int, merge_every: int, use_kernel: bool,
     return jax.jit(fn, donate_argnums=(6, 7))
 
 
+def resolve_worker_devices(workers: int, devices: tuple | None = None) -> tuple:
+    """The ``workers``-wide device slice, or a fail-fast ValueError when
+    the mesh cannot exist — cheap, so callers run it BEFORE any O(edges)
+    host packing."""
+    if devices is None:
+        devices = tuple(jax.devices())
+    if len(devices) < workers:
+        raise ValueError(
+            f"need {workers} devices but only {len(devices)} are visible; "
+            f"on CPU hosts set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={workers} before importing jax")
+    return tuple(devices[:workers])
+
+
+def _run_parallel_packed_scan(
+    packed: PackedBlocks,
+    s_masks: jax.Array,
+    sizes: jax.Array,
+    *,
+    k: int,
+    workers: int,
+    merge_every: int,
+    use_kernel: bool,
+    interpret: bool | None,
+    devices: tuple | None = None,
+    shuffle_rng: np.random.Generator | None = None,
+    count_name: str = "parallel_partition_scan",
+) -> tuple[jax.Array, jax.Array, jax.Array, dict, np.ndarray | None]:
+    """Shared Alg 4 core of ``parallel_blocked_partition_u_impl`` and the
+    streaming parallel feed: pad the block stack to whole per-worker merge
+    groups, shard it across the worker mesh (optionally in a randomized
+    block→worker order drawn from ``shuffle_rng`` — the arXiv:1502.02606
+    assignment the stream uses), and run the cached shard_map pipeline
+    against the (donated) live ``(s_masks, sizes)``.
+
+    Returns ``(parts_blocks, s_out, sizes_out, traffic, perm)`` where
+    ``parts_blocks`` is the device (workers, n_super, merge_every, B)
+    output in *sharded* block order (flatten + ``argsort(perm)`` to
+    recover stack order when a permutation was drawn; ``perm`` is None
+    otherwise), and ``traffic`` is the push/pull dict in bitmask-word
+    bytes — the single source of the Alg 4 counter formulas.
+    """
+    devices = resolve_worker_devices(workers, devices)
+    nb = packed.valid.shape[0]
+    # blocks per worker, rounded up to whole merge groups
+    nb_per = -(-nb // workers)
+    nb_per = -(-nb_per // merge_every) * merge_every
+    packed = _pad_block_stack(packed, nb_per * workers)
+    total = nb_per * workers
+    perm = shuffle_rng.permutation(total) if shuffle_rng is not None else None
+
+    def shard(x):
+        if perm is not None:
+            x = x[perm]
+        return jnp.asarray(x.reshape((workers, nb_per) + x.shape[1:]))
+
+    fn = _parallel_scan_fn(devices, k, merge_every, use_kernel, interpret)
+    _count_dispatch(count_name)
+    parts_blocks, s_out, sizes_out, pushed_words = fn(
+        shard(packed.valid), shard(packed.widx), shard(packed.vals),
+        shard(packed.trunc), shard(packed.tr_ids), shard(packed.tr_masks),
+        s_masks, sizes)
+    W = packed.tr_masks.shape[-1]
+    n_super = nb_per // merge_every
+    traffic = {
+        "pushed_bytes": 4 * int(pushed_words),
+        "pulled_bytes": 4 * workers * n_super * k * W,
+        "tasks": workers * n_super,
+        "stale_pushes_missed": n_super * workers * (workers - 1),
+    }
+    return parts_blocks, s_out, sizes_out, traffic, perm
+
+
 def parallel_blocked_partition_u_impl(
     graph: BipartiteGraph,
     k: int,
@@ -738,15 +823,7 @@ def parallel_blocked_partition_u_impl(
         raise ValueError(f"workers must be >= 1, got {workers}")
     if merge_every < 1:
         raise ValueError(f"merge_every must be >= 1, got {merge_every}")
-    if devices is None:
-        devices = tuple(jax.devices())
-    if len(devices) < workers:
-        raise ValueError(
-            f"parallel_device needs {workers} devices but only "
-            f"{len(devices)} are visible; on CPU hosts set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={workers} "
-            f"before importing jax")
-    devices = tuple(devices[:workers])
+    devices = resolve_worker_devices(workers, devices)  # before the pack
     t_pack = time.perf_counter()
     W = (graph.num_v + 31) // 32
     if init_sets is None:
@@ -757,30 +834,12 @@ def parallel_blocked_partition_u_impl(
     rng = np.random.default_rng(seed)
     order = rng.permutation(graph.num_u)
     packed = pack_graph_blocks(graph, block, order=order, cap=cap)
-    nb = packed.valid.shape[0]
-    # blocks per worker, rounded up to whole merge groups
-    nb_per = -(-nb // workers)
-    nb_per = -(-nb_per // merge_every) * merge_every
-    packed = _pad_block_stack(packed, nb_per * workers)
-
-    def shard(x):
-        return jnp.asarray(x.reshape((workers, nb_per) + x.shape[1:]))
-
     if timings is not None:
         timings["pack"] = time.perf_counter() - t_pack
-    fn = _parallel_scan_fn(devices, k, merge_every, use_kernel, interpret)
-    _count_dispatch("parallel_partition_scan")
-    parts_blocks, s_out, _, pushed_words = fn(
-        shard(packed.valid), shard(packed.widx), shard(packed.vals),
-        shard(packed.trunc), shard(packed.tr_ids), shard(packed.tr_masks),
-        s_masks, sizes)
-    n_super = nb_per // merge_every
-    traffic = {
-        "pushed_bytes": 4 * int(pushed_words),
-        "pulled_bytes": 4 * workers * n_super * k * W,
-        "tasks": workers * n_super,
-        "stale_pushes_missed": n_super * workers * (workers - 1),
-    }
+    parts_blocks, s_out, _, traffic, _ = _run_parallel_packed_scan(
+        packed, s_masks, sizes, k=k, workers=workers,
+        merge_every=merge_every, use_kernel=use_kernel, interpret=interpret,
+        devices=devices)
     if not as_numpy:
         flat = parts_blocks.reshape(-1)[: graph.num_u]
         parts = jnp.zeros((graph.num_u,), jnp.int32).at[

@@ -7,6 +7,7 @@ from .ops import (  # noqa: F401
     pack_bitmask_csr_compact,
     pack_bitmask_csr_sparse,
     packed_delta,
+    packed_intersect_counts,
     packed_union,
     packed_union_delta,
     parsa_cost,

@@ -109,6 +109,78 @@ class PSCluster:
         self.rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------
+    def apply_placement(self, parts_u: np.ndarray, parts_v: np.ndarray) -> dict:
+        """Apply a new Parsa placement mid-run (streaming drift repair).
+
+        Re-shards example rows across workers and weight ownership across
+        servers, metering the one-time re-sharding traffic in the same
+        ``TrafficMeter`` the training loop uses: a moved example row costs
+        its nnz × 8 bytes (4 B key + 4 B value per entry), a moved weight
+        8 bytes — both inter-machine only when the hosting machine actually
+        changes.  Weight values and the optimizer state live in the global
+        vector, so training continues exactly where it left off; the push
+        key caches are invalidated (working sets changed, keys must be
+        re-sent).  Returns the move counts and metered bytes.
+        """
+        parts_u = np.asarray(parts_u)
+        parts_v = np.asarray(parts_v)
+        if parts_u.shape != self.parts_u.shape:
+            raise ValueError(
+                f"parts_u shape {parts_u.shape} != cluster's "
+                f"{self.parts_u.shape} (PSCluster serves a fixed graph)")
+        if parts_v.shape != self.parts_v.shape:
+            raise ValueError(
+                f"parts_v shape {parts_v.shape} != cluster's "
+                f"{self.parts_v.shape}")
+        new_owner = parts_v.copy()
+        rr = np.flatnonzero(new_owner < 0)
+        new_owner[rr] = rr % self.k
+        bytes_before = self.meter.total
+        k = self.k
+        # moved example rows: delta-encoded batch re-shard, 8 B per entry
+        # (4 B key + 4 B value); per-(src, dst) byte totals in two
+        # vectorized bincount passes instead of k² full-array masks
+        deg = np.diff(self.graph.u_indptr)
+        pair_u = self.parts_u.astype(np.int64) * k + parts_u
+        row_bytes = np.bincount(pair_u, weights=deg * 8.0,
+                                minlength=k * k).reshape(k, k)
+        moved_rows = int((self.parts_u != parts_u).sum())
+        # moved weights: value + key per parameter changing its server
+        moved_w = self.owner != new_owner
+        moved_weights = int(moved_w.sum())
+        pair_v = self.owner[moved_w].astype(np.int64) * k + new_owner[moved_w]
+        w_bytes = np.bincount(pair_v, minlength=k * k).reshape(k, k) * 8
+        for i in range(k):
+            for j in range(k):
+                if i == j:
+                    continue
+                nbytes = int(row_bytes[i, j]) + int(w_bytes[i, j])
+                if nbytes:
+                    self.meter.add(i, j, nbytes)
+        # rebuild the sharded state for the new placement
+        self.parts_u = parts_u.copy()
+        self.parts_v = parts_v.copy()
+        self.owner = new_owner
+        self.need = need_matrix(self.graph, self.parts_u, self.k)
+        labels = np.asarray(self.full_batch.labels)
+        self.rows, self.batches = [], []
+        for i in range(self.k):
+            rows = np.flatnonzero(self.parts_u == i)
+            self.rows.append(rows)
+            self.batches.append(
+                SparseBatch.from_graph(self.graph, rows, labels))
+        self._keys_sent[:] = False
+        # error-feedback residuals are supported on the OLD working sets;
+        # under the new need masks the stranded coordinates could neither
+        # be sent nor dropped — start the accumulators clean instead
+        self._ef = [np.zeros(self.graph.num_v, np.float32)
+                    for _ in range(self.k)]
+        return {
+            "moved_rows": moved_rows,
+            "moved_weights": moved_weights,
+            "reshard_bytes": self.meter.total - bytes_before,
+        }
+
     def _worker_view(self, i: int, t: int) -> np.ndarray:
         """Weights as seen by worker i at iteration t under delay ≤ τ."""
         tau = self.cfg.max_delay

@@ -1,0 +1,481 @@
+r"""Online incremental Parsa: partition a growing graph chunk by chunk.
+
+The paper's blocked greedy (§4.2) is already an online algorithm — every
+block is assigned against the live neighbor sets and never revisited — so
+a *streaming* partitioner needs no new math, only new plumbing: keep the
+packed ``(k, W)`` server sets resident on device across arrivals and run
+each arriving chunk through the existing fused cost+select scan with the
+live sets as the carry.
+
+    session = StreamSession(ParsaStreamConfig(base=ParsaConfig(
+        k=16, backend="device_scan")), num_v=65_536)
+    for chunk in arriving_graphs:          # BipartiteGraph chunks
+        upd = session.feed(chunk)          # ONE scan dispatch (asserted)
+        upd.parts, upd.metrics             # incremental delta
+    res = session.result()                 # full PartitionResult
+
+``feed`` is O(chunk) work and O(1) XLA dispatches: one ``_partition_scan``
+launch (the same jitted program ``device_scan`` runs, carries donated) plus
+one popcount-metrics launch.  Same-shaped chunks hit the jit cache; the
+truncated-row side channel is padded to powers of two (``tb_pad``) so data
+jitter does not retrigger compilation.  With ``workers > 1`` the chunk's
+blocks fan out across the ``parallel_device`` mesh through the cached
+shard_map pipeline, with *randomized* block→worker assignment
+(arXiv:1502.02606: random data distribution preserves the distributed
+greedy's approximation guarantees in expectation) and OR-merges every
+``merge_every`` blocks.
+
+Drift repair: assignments are never revisited by ``feed``, so under
+distribution drift the partition decays.  A ``DriftTracker`` watches the
+per-feed popcount metrics and triggers ``repartition()`` — a warm-started
+(§4.4 global-initialization) full repartition of the arena — whose result
+is matched back onto the old labels by ``plan_migration`` so serving
+machines keep the part closest to what they already host, with migration
+bytes metered in ``TrafficCounters`` units.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+import numpy as np
+
+from ..api import ParsaConfig, PartitionResult
+from ..api_backends import TrafficCounters
+from ..core.bipartite import BipartiteGraph
+from ..core.costs import PartitionMetrics
+from ..core.jax_partition import (
+    _count_dispatch,
+    _partition_scan,
+    _run_parallel_packed_scan,
+    blocked_partition_u_impl,
+    pack_graph_blocks,
+    parallel_blocked_partition_u_impl,
+)
+from ..core.parallel import global_initialization
+from ..kernels.parsa_cost import coerce_packed_sets
+from .arena import StreamArena
+from .drift import DriftDecision, DriftTracker
+from .migrate import MigrationPlan, plan_migration
+
+__all__ = ["ParsaStreamConfig", "StreamSession", "StreamUpdate",
+           "stream_partition"]
+
+_STREAM_BACKENDS = ("device_scan", "parallel_device")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParsaStreamConfig:
+    """Streaming knobs on top of a device ``ParsaConfig``.
+
+    ``base`` supplies the partitioning knobs the feed scan shares with the
+    one-shot pipeline (k, block_size, cap, use_kernel/interpret, seed;
+    workers/merge_every/devices when ``base.backend == "parallel_device"``).
+    The stream fields control drift repair and shape stability.
+    """
+
+    base: ParsaConfig
+    drift_window: int = 8          # feeds the drift baseline spans
+    drift_threshold: float = 1.15  # degradation ratio that trips repair
+    drift_min_feeds: int = 2       # history before a trigger is allowed
+    repartition: str = "drift"     # "drift" (auto) | "never" (manual only)
+    repartition_frac: float = 0.02  # §4.4 global-init sample; 0 = cold
+    tb_pad: int = 8                # truncated-row channel pad (pow2 bucket)
+    shuffle_blocks: bool = True    # randomized block→worker assignment
+
+    def __post_init__(self):
+        if self.base.backend not in _STREAM_BACKENDS:
+            raise ValueError(
+                f"streaming needs a device backend {_STREAM_BACKENDS}, got "
+                f"base.backend={self.base.backend!r}")
+        if self.repartition not in ("drift", "never"):
+            raise ValueError(
+                f"repartition must be 'drift' or 'never', got "
+                f"{self.repartition!r}")
+        if not 0.0 <= self.repartition_frac <= 1.0:
+            raise ValueError(
+                f"repartition_frac must be in [0, 1], got "
+                f"{self.repartition_frac}")
+        if self.tb_pad < 1:
+            raise ValueError(f"tb_pad must be >= 1, got {self.tb_pad}")
+        # window/threshold/min_feeds: fail at construction, not first feed
+        DriftTracker(self.drift_window, self.drift_threshold,
+                     self.drift_min_feeds)
+
+    @property
+    def workers(self) -> int:
+        if self.base.backend != "parallel_device":
+            return 1
+        return (self.base.devices if self.base.devices is not None
+                else self.base.workers)
+
+    def replace(self, **changes) -> "ParsaStreamConfig":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass
+class StreamUpdate:
+    """Incremental ``PartitionResult`` delta for one fed chunk."""
+
+    chunk: int                      # feed ordinal
+    u_start: int                    # global U-id range this chunk occupies
+    u_stop: int
+    parts: np.ndarray               # (u_stop - u_start,) int32 assignments
+    metrics: PartitionMetrics       # popcount objectives after this feed
+    drift: DriftDecision | None     # None when repartition == "never"
+    repartitioned: bool
+    migration: MigrationPlan | None  # set when this feed triggered repair
+    traffic: TrafficCounters | None  # parallel feeds: push/pull this feed
+    timings: dict[str, float]
+    dispatches: dict[str, int]      # device launches issued by this feed
+
+
+class StreamSession:
+    """Partition a graph that grows over time, entirely on device.
+
+    The live state (packed server sets + sizes) never leaves the device
+    between feeds; the arena keeps the appended CSR on the host for
+    snapshots, repartitions, and exact metrics.  ``parts`` holds the
+    current assignment of every fed U vertex (relabeled in place when a
+    drift repair lands).
+    """
+
+    def __init__(self, config: ParsaStreamConfig, num_v: int):
+        if config.workers > 1:
+            # fail at construction, not mid-stream
+            from ..core.jax_partition import resolve_worker_devices
+
+            resolve_worker_devices(config.workers)
+        self.config = config
+        self.k = config.base.k
+        self.arena = StreamArena(config.base.k, num_v)
+        self._parts_buf = np.empty(1024, np.int32)  # doubles with the arena
+        self.tracker = DriftTracker(config.drift_window,
+                                    config.drift_threshold,
+                                    config.drift_min_feeds)
+        self._rng = np.random.default_rng(config.base.seed)
+        self.n_feeds = 0
+        self.repartitions = 0
+        # S_i == N(U_i) holds for pure cold streaming; a §4.4-seeded
+        # repartition may add sampled bits, after which popcount metrics
+        # over s_masks are an upper bound and result() recomputes exactly.
+        self._need_exact = True
+        self._pushed = 0
+        self._pulled = 0
+        self._tasks = 0
+        self._stale = 0
+
+    # ------------------------------------------------------------- feeding
+    def feed(self, chunk: BipartiteGraph) -> StreamUpdate:
+        """Assign one arriving chunk of U vertices against the live sets.
+
+        One jitted scan dispatch (plus one popcount-metrics dispatch) per
+        call, O(1) in both stream length and chunk count — asserted via
+        ``dispatch_counter`` in tests and CI.  May additionally run a
+        drift-triggered ``repartition()`` before returning.
+
+        Failure atomicity: the chunk is appended to the arena only AFTER
+        its scan succeeds, so an error while packing or launching leaves
+        the session's graph and parts consistent (retry-safe).  The live
+        server sets are donated into the dispatch itself — a failure
+        *inside* the launch remains unrecoverable, like any donated-carry
+        jax program.
+        """
+        import jax.numpy as jnp
+
+        from ..core.jax_partition import dispatch_counter
+
+        base = self.config.base
+        timings: dict[str, float] = {}
+        t_total = time.perf_counter()
+        with dispatch_counter() as counts:
+            n = chunk.num_u
+            self.arena.prepare(chunk)   # validate + capacity growth only
+            order = self._rng.permutation(n)
+            t0 = time.perf_counter()
+            packed = pack_graph_blocks(
+                self.arena.capacity_graph(chunk), base.block_size,
+                order=order, cap=base.cap, tb_pad=self.config.tb_pad)
+            timings["pack"] = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            traffic = None
+            if self.config.workers == 1:
+                _count_dispatch("stream_feed_scan")
+                parts_blocks, s_out, sz_out = _partition_scan(
+                    jnp.asarray(packed.valid), jnp.asarray(packed.widx),
+                    jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
+                    jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
+                    self.arena.s_masks, self.arena.sizes,
+                    k=self.k, use_kernel=base.use_kernel,
+                    interpret=base.interpret)
+                flat = np.asarray(parts_blocks).reshape(-1)[:n]
+            else:
+                flat, s_out, sz_out, traffic = self._feed_parallel(packed, n)
+            # scan succeeded — commit: live sets, CSR append, parts
+            self.arena.s_masks, self.arena.sizes = s_out, sz_out
+            u_start, u_stop = self.arena.append(chunk)
+            parts_chunk = np.empty(n, np.int32)
+            parts_chunk[order] = flat
+            self._store_parts(u_start, parts_chunk)
+            timings["partition_u"] = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            metrics = self._popcount_metrics()
+            timings["metrics"] = time.perf_counter() - t0
+
+            decision = migration = None
+            if self.config.repartition == "drift":
+                decision = self.tracker.update(metrics)
+                if decision.repartition:
+                    t0 = time.perf_counter()
+                    migration = self.repartition()
+                    timings["repartition"] = time.perf_counter() - t0
+                    metrics = self._popcount_metrics()
+        self.n_feeds += 1
+        timings["total"] = time.perf_counter() - t_total
+        dispatches = {name: c for name, c in counts.items() if c}
+        return StreamUpdate(
+            chunk=self.n_feeds - 1, u_start=u_start, u_stop=u_stop,
+            parts=self.parts[u_start:u_stop].copy(), metrics=metrics,
+            drift=decision, repartitioned=migration is not None,
+            migration=migration, traffic=traffic, timings=timings,
+            dispatches=dispatches)
+
+    def _feed_parallel(self, packed, n: int):
+        """Fan one chunk's blocks across the worker mesh: the shared Alg 4
+        core (``_run_parallel_packed_scan``) with randomized block→worker
+        assignment, against the live donated (S, sizes)."""
+        base = self.config.base
+        workers = self.config.workers
+        shuffle = (self._rng if self.config.shuffle_blocks and workers > 1
+                   else None)
+        parts_blocks, s_out, sz_out, traffic_d, perm = \
+            _run_parallel_packed_scan(
+                packed, self.arena.s_masks, self.arena.sizes, k=self.k,
+                workers=workers, merge_every=base.merge_every,
+                use_kernel=base.use_kernel, interpret=base.interpret,
+                shuffle_rng=shuffle, count_name="stream_feed_scan")
+        B = packed.valid.shape[1]
+        by_block = np.asarray(parts_blocks).reshape(-1, B)
+        if perm is not None:
+            by_block = by_block[np.argsort(perm)]
+        flat = by_block.reshape(-1)[:n]
+        traffic = TrafficCounters(**traffic_d)
+        self._accumulate(traffic)
+        return flat, s_out, sz_out, traffic
+
+    @property
+    def parts(self) -> np.ndarray:
+        """Current assignment of every fed U vertex (view, not a copy)."""
+        return self._parts_buf[: self.arena.num_u]
+
+    def _store_parts(self, start: int, parts_chunk: np.ndarray) -> None:
+        """Amortized-O(chunk) append: double the buffer like the arena
+        does instead of re-concatenating the whole history every feed."""
+        need = start + parts_chunk.shape[0]
+        if need > self._parts_buf.shape[0]:
+            cap = max(1, self._parts_buf.shape[0])
+            while cap < need:
+                cap *= 2
+            buf = np.empty(cap, np.int32)
+            buf[:start] = self._parts_buf[:start]
+            self._parts_buf = buf
+        self._parts_buf[start:need] = parts_chunk
+
+    def _accumulate(self, t: TrafficCounters) -> None:
+        self._pushed += t.pushed_bytes
+        self._pulled += t.pulled_bytes
+        self._tasks += t.tasks
+        self._stale += t.stale_pushes_missed
+
+    @property
+    def traffic(self) -> TrafficCounters:
+        """Cumulative session traffic: parallel-feed push/pull plus metered
+        migration bytes, all in bitmask-word-byte units."""
+        return TrafficCounters(self._pushed, self._pulled, self._tasks,
+                               self._stale)
+
+    # ------------------------------------------------------------- metrics
+    def _popcount_metrics(self) -> PartitionMetrics:
+        """Objectives (4)/(6) (+ the parts_v=None traffic convention) from
+        the live packed sets — one tiny device launch, O(k·W)."""
+        _count_dispatch("stream_metrics")
+        sizes, footprint = _popcount_rows(self.arena.s_masks,
+                                          self.arena.sizes)
+        sizes = np.asarray(sizes).astype(np.int64)
+        footprint = np.asarray(footprint).astype(np.int64)
+        return PartitionMetrics(self.k, sizes, footprint, footprint.copy(),
+                                footprint.copy(), np.zeros(self.k, np.int64))
+
+    # --------------------------------------------------------- drift repair
+    def repartition(self) -> MigrationPlan:
+        """Full repartition of everything fed so far, warm-started per §4.4
+        (``repartition_frac`` sample seeds the sets; 0 = cold), matched back
+        onto the live labels by the packed intersection matrix so serving
+        machines keep their closest part.  Updates the live state in place
+        and returns the metered ``MigrationPlan``."""
+        import jax.numpy as jnp
+
+        base = self.config.base
+        g = self.arena.graph()
+        old_parts = self.parts.copy()   # the buffer is overwritten below
+        old_masks = self.arena.masks_np(logical=False)
+        init_sets = None
+        if self.config.repartition_frac > 0:
+            dense = global_initialization(
+                g, self.k, sample_frac=self.config.repartition_frac,
+                theta=base.theta, select=base.select, seed=base.seed)
+            packed = coerce_packed_sets(dense, g.num_v)
+            init_sets = np.pad(
+                packed, [(0, 0), (0, self.arena.W_cap - packed.shape[1])])
+            self._need_exact = False
+        g_cap = BipartiteGraph(g.num_u, self.arena.capacity_v,
+                               g.u_indptr, g.u_indices)
+        if self.config.workers > 1:
+            new_parts, new_masks, scan_traffic = \
+                parallel_blocked_partition_u_impl(
+                    g_cap, self.k, workers=self.config.workers,
+                    block=base.block_size, merge_every=base.merge_every,
+                    init_sets=init_sets, use_kernel=base.use_kernel,
+                    interpret=base.interpret, seed=base.seed, cap=base.cap)
+            # the repair's own Alg 4 push/pull rides on the session total,
+            # same units as the per-feed counters
+            self._accumulate(TrafficCounters(**scan_traffic))
+        else:
+            new_parts, new_masks = blocked_partition_u_impl(
+                g_cap, self.k, block=base.block_size, init_sets=init_sets,
+                use_kernel=base.use_kernel, interpret=base.interpret,
+                seed=base.seed, cap=base.cap)
+        plan = plan_migration(new_parts, new_masks, old_parts, old_masks,
+                              degrees=g.degree_u())
+        self._parts_buf[: plan.parts_u.shape[0]] = plan.parts_u
+        self.arena.s_masks = jnp.asarray(plan.s_masks)
+        self.arena.sizes = jnp.asarray(
+            np.bincount(plan.parts_u, minlength=self.k).astype(np.int32))
+        self._accumulate(plan.traffic)
+        self.repartitions += 1
+        self.tracker.reset()
+        return plan
+
+    # ------------------------------------------------------------ snapshot
+    def save(self, path) -> None:
+        """Snapshot the FULL stream state — arena (graph + live sets),
+        per-vertex parts, feed counters, and the RNG state — so ``load``
+        resumes the stream exactly where it stopped (the next feed of the
+        same chunk sequence is bit-identical).  The drift tracker's sliding
+        window is not persisted: after a restore the baseline restarts,
+        which can only delay (never corrupt) the next repair."""
+        import json
+
+        np.savez_compressed(
+            path, **self.arena.state_arrays(),
+            parts=self.parts,
+            n_feeds=self.n_feeds, repartitions=self.repartitions,
+            need_exact=self._need_exact,
+            traffic=np.asarray([self._pushed, self._pulled, self._tasks,
+                                self._stale], np.int64),
+            rng_state=np.frombuffer(
+                json.dumps(self._rng.bit_generator.state).encode(),
+                dtype=np.uint8))
+
+    @classmethod
+    def load(cls, path, config: ParsaStreamConfig) -> "StreamSession":
+        """Restore a stream saved by ``save``.  ``config.base.k`` must
+        match the snapshot's k (the packed sets are k-shaped)."""
+        import json
+
+        z = np.load(path)
+        if int(z["k"]) != config.base.k:
+            raise ValueError(
+                f"snapshot has k={int(z['k'])} but config.base.k="
+                f"{config.base.k}")
+        session = cls(config, num_v=int(z["num_v"]))
+        session.arena = StreamArena.from_state(z)
+        parts = np.asarray(z["parts"], np.int32)
+        session._store_parts(0, parts)
+        session.n_feeds = int(z["n_feeds"])
+        session.repartitions = int(z["repartitions"])
+        session._need_exact = bool(z["need_exact"])
+        session._pushed, session._pulled, session._tasks, session._stale = (
+            int(x) for x in z["traffic"])
+        session._rng.bit_generator.state = json.loads(
+            bytes(z["rng_state"]).decode())
+        return session
+
+    # ------------------------------------------------------------- results
+    def result(self, refine_v: bool | None = None) -> PartitionResult:
+        """Assemble the current stream state into a full
+        ``PartitionResult`` (device-resident Alg 2 + exact metrics), the
+        same record the one-shot facade returns."""
+        import jax.numpy as jnp
+
+        from ..core.jax_refine import evaluate_device, refine_v_device
+
+        base = self.config.base
+        g = self.arena.graph()
+        timings: dict[str, float] = {}
+        t_total = time.perf_counter()
+        s_logical = self.arena.masks_np()
+        need_words = jnp.asarray(s_logical) if self._need_exact else None
+        refine = base.refine_v if refine_v is None else refine_v
+        parts_v = parts_v_dev = None
+        if refine:
+            t0 = time.perf_counter()
+            parts_v_dev, need_words = refine_v_device(
+                g, jnp.asarray(self.parts), self.k, sweeps=base.sweeps,
+                chunk=base.refine_chunk, use_kernel=base.use_kernel,
+                interpret=base.interpret, need_words=need_words)
+            parts_v = np.asarray(parts_v_dev)
+            timings["partition_v"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        metrics = evaluate_device(g, self.parts, parts_v_dev, self.k,
+                                  need_words=need_words)
+        timings["metrics"] = time.perf_counter() - t0
+        timings["total"] = time.perf_counter() - t_total
+        return PartitionResult(
+            parts_u=self.parts.copy(), parts_v=parts_v, num_v=g.num_v,
+            k=self.k, config=base, metrics=metrics, timings=timings,
+            traffic=self.traffic if self._tasks or self._pushed else None,
+            _packed_sets=s_logical)
+
+
+_POPCOUNT_FN = None
+
+
+def _popcount_rows(s_masks, sizes):
+    """One fused launch: (sizes, per-row popcount of the packed sets)."""
+    global _POPCOUNT_FN
+    if _POPCOUNT_FN is None:
+        import jax
+        import jax.numpy as jnp
+
+        def body(m, s):
+            return s, jax.lax.population_count(m).astype(jnp.int32).sum(
+                axis=1)
+
+        _POPCOUNT_FN = jax.jit(body)
+    return _POPCOUNT_FN(s_masks, sizes)
+
+
+def stream_partition(
+    chunks: Iterable[BipartiteGraph],
+    config: ParsaStreamConfig,
+    num_v: int | None = None,
+) -> tuple[PartitionResult, list[StreamUpdate]]:
+    """Facade convenience: feed every chunk through one ``StreamSession``
+    and return ``(final PartitionResult, per-chunk StreamUpdate deltas)``.
+    ``num_v`` defaults to the first chunk's parameter extent (the arena
+    grows if later chunks exceed it)."""
+    it = iter(chunks)
+    try:
+        first = next(it)
+    except StopIteration:
+        raise ValueError("stream_partition needs at least one chunk") \
+            from None
+    session = StreamSession(config,
+                            num_v=num_v if num_v is not None else first.num_v)
+    updates = [session.feed(first)]
+    updates.extend(session.feed(c) for c in it)
+    return session.result(), updates

@@ -181,6 +181,58 @@ def test_legacy_shims_emit_deprecation_warnings(small_graph):
         blocked_partition_u_hostloop(g, 4, block=64, use_kernel=False)
 
 
+def test_legacy_shims_warn_exactly_once_and_match_registry(small_graph):
+    """Each of the five legacy entry points emits its DeprecationWarning
+    exactly ONCE per call (no double-warn through the delegation chain) and
+    still returns what the backend registry returns."""
+    import warnings
+
+    from repro.api_backends import get_backend
+    from repro.core.jax_partition import (
+        blocked_partition_u, blocked_partition_u_hostloop)
+    from repro.core.parallel import ParallelParsa
+    from repro.core.partition_u import partition_u
+    from repro.core.subgraphs import sequential_parsa
+
+    g, k = small_graph, 4
+
+    def once(fn):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            out = fn()
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1, [str(w.message) for w in dep]
+        return out
+
+    res = once(lambda: partition_u(g, k))
+    want = get_backend("host")(g, ParsaConfig(k=k))
+    assert np.array_equal(res.parts_u, want.parts_u)
+
+    got = once(lambda: sequential_parsa(g, k, b=2, a=0, seed=1))
+    want = get_backend("host")(g, ParsaConfig(k=k, blocks=2, seed=1))
+    assert np.array_equal(got, want.parts_u)
+
+    rep = once(lambda: ParallelParsa(k, workers=2, tau=0, seed=2)
+               .run(g, b=2))
+    want = get_backend("parallel_sim")(
+        g, ParsaConfig(k=k, blocks=2, workers=2, tau=0, seed=2))
+    assert np.array_equal(rep.parts_u, want.parts_u)
+
+    got = once(lambda: blocked_partition_u(g, k, block=64, use_kernel=False,
+                                           seed=3))
+    want = get_backend("device_scan")(
+        g, ParsaConfig(k=k, backend="device_scan", block_size=64,
+                       use_kernel=False, seed=3))
+    assert np.array_equal(got, want.parts_u)
+
+    got = once(lambda: blocked_partition_u_hostloop(
+        g, k, block=64, use_kernel=False, seed=3))
+    want = get_backend("host_blocked_oracle")(
+        g, ParsaConfig(k=k, backend="host_blocked_oracle", block_size=64,
+                       use_kernel=False, seed=3))
+    assert np.array_equal(got, want.parts_u)
+
+
 # ---------------------------------------------- legacy shims: exact parity
 # Acceptance: each shim, now delegating through the backend registry, returns
 # results bit-identical to its pre-refactor implementation on a fixed-seed
