@@ -1,0 +1,203 @@
+"""Elastic Parsa under chaos: kill/add/straggle mid-stream, then prove the
+warm repair path earns its keep.
+
+The PR 6 acceptance run (``run_acceptance()``): a text graph arrives in
+``chunks`` feeds through an ``ElasticSession`` while a seeded
+``ChaosSchedule`` grows the fleet 8→12 (four ``add`` events), kills two
+machines (warm §4.4 repair from the surviving packed sets), and straggles
+a worker lane.  Asserts:
+
+  * every repair costs exactly ONE ``elastic_repair_scan`` dispatch and
+    every grow exactly ONE ``elastic_grow_scan`` (O(1) jitted dispatches
+    per elastic op, counted per feed);
+  * the whole chaos run is bit-deterministic — the warm-up replay and the
+    timed replay produce identical ``parts`` and packed ``s_masks``;
+  * warm repair recovers ≥ ``min_repair_speedup``× faster than a cold
+    full ``repartition()`` of the same post-stream state (both jit-warmed
+    on clones restored from one snapshot, so shapes and state match);
+  * the final elastic partition's ``traffic_max`` stays within
+    ``max_quality_pct``% of an oracle one-shot ``device_scan`` partition
+    of the full graph at the final ``k`` — elasticity is not allowed to
+    buy availability with serving traffic.
+
+Per-feed rows land in ``benchmarks/out/chaos_bench.csv`` and the repo-root
+``BENCH_pipeline.json`` under ``chaos_rows`` (``report.emit_chaos_bench``).
+``run()`` is the CI-scale variant (same assertions minus the wall-clock
+floor, noisy on shared runners).
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.api import (ChaosEvent, ChaosSchedule, ElasticConfig,
+                       ElasticSession, ParsaConfig, ParsaStreamConfig,
+                       StreamSession, partition)
+from repro.core.jax_partition import dispatch_counter
+from repro.graphs import text_like
+
+from .common import emit, score
+from .report import emit_chaos_bench
+
+# kills/adds per feed index — the "disaster script" both replays follow
+_EVENTS = (
+    ChaosEvent(feed=2, kind="add"),
+    ChaosEvent(feed=3, kind="add"),
+    ChaosEvent(feed=4, kind="straggle", machine=1, factor=4.0),
+    ChaosEvent(feed=5, kind="kill"),           # seeded target
+    ChaosEvent(feed=6, kind="add"),
+    ChaosEvent(feed=7, kind="add"),
+    ChaosEvent(feed=8, kind="recover", machine=1),
+    ChaosEvent(feed=9, kind="kill"),           # seeded target
+)
+
+
+def _expected(schedule: ChaosSchedule, feed: int, kind: str) -> int:
+    return sum(1 for ev in schedule.events
+               if ev.feed == feed and ev.kind == kind)
+
+
+def _chaos_replay(scfg: ParsaStreamConfig, num_v: int, chunk_graphs,
+                  seed: int, check_dispatches: bool):
+    """One full chaos run; returns (session, per-feed rows)."""
+    chaos = ChaosSchedule(list(_EVENTS), seed=seed)
+    sess = ElasticSession(ElasticConfig(stream=scfg), num_v=num_v,
+                          chaos=chaos)
+    rows = []
+    for i, cg in enumerate(chunk_graphs):
+        kinds = ";".join(ev.kind for ev in chaos.events if ev.feed == i)
+        t0 = time.perf_counter()
+        with dispatch_counter() as counts:
+            upd = sess.feed(cg)
+        feed_s = time.perf_counter() - t0
+        if check_dispatches:
+            assert counts["stream_feed_scan"] == 1, counts
+            assert counts.get("elastic_repair_scan", 0) == \
+                _expected(chaos, i, "kill"), (i, counts)
+            assert counts.get("elastic_grow_scan", 0) == \
+                _expected(chaos, i, "add"), (i, counts)
+        rows.append({
+            "feed": i, "k": sess.k, "events": kinds or "-",
+            "num_u_chunk": cg.num_u, "feed_s": feed_s,
+            "traffic_max": int(upd.metrics.traffic_max),
+            "migration_bytes_total": int(sess.traffic.migration_bytes),
+        })
+    assert chaos.remaining == 0, "schedule events never delivered"
+    return sess, rows
+
+
+def _clone(snapshot: Path, scfg_final: ParsaStreamConfig,
+           num_v: int) -> ElasticSession:
+    """Restore the post-stream state into a fresh elastic wrapper."""
+    es = ElasticSession(ElasticConfig(stream=scfg_final), num_v=num_v)
+    es.stream = StreamSession.load(snapshot, scfg_final)
+    return es
+
+
+def run(scale: float = 1.0, k0: int = 8, chunks: int = 12,
+        min_repair_speedup: float | None = None,
+        max_quality_pct: float | None = 5.0):
+    """CI-scale chaos benchmark (same shape as the acceptance run)."""
+    return run_acceptance(
+        n_u=int(12_000 * scale), num_v=int(16_384 * scale), k0=k0,
+        chunks=chunks, block=128, min_repair_speedup=min_repair_speedup,
+        max_quality_pct=max_quality_pct, name="chaos_bench_quick")
+
+
+def run_acceptance(n_u: int = 60_000, num_v: int = 49_152, k0: int = 8,
+                   chunks: int = 12, block: int = 256,
+                   min_repair_speedup: float | None = 3.0,
+                   max_quality_pct: float | None = 5.0,
+                   name: str = "chaos_bench"):
+    g = text_like(n_u, num_v, mean_len=20, seed=0)
+    base = ParsaConfig(k=k0, backend="device_scan", block_size=block,
+                       refine_v=False, seed=0)
+    scfg = ParsaStreamConfig(base=base, repartition="never")
+    bounds = np.linspace(0, n_u, chunks + 1).astype(int)
+    chunk_graphs = [g.slice_u(int(bounds[i]), int(bounds[i + 1]))
+                    for i in range(chunks)]
+
+    # ---- replay twice: first warms every jit shape the script touches,
+    # second is timed; identical outputs = bit-determinism under chaos
+    warm_sess, _ = _chaos_replay(scfg, num_v, chunk_graphs, seed=0,
+                                 check_dispatches=True)
+    sess, rows = _chaos_replay(scfg, num_v, chunk_graphs, seed=0,
+                               check_dispatches=True)
+    assert np.array_equal(warm_sess.parts, sess.parts), \
+        "chaos replay is not bit-deterministic (parts differ)"
+    assert np.array_equal(warm_sess.stream.arena.masks_np(),
+                          sess.stream.arena.masks_np()), \
+        "chaos replay is not bit-deterministic (packed sets differ)"
+    final_k = sess.k
+    kills = sum(1 for ev in _EVENTS if ev.kind == "kill")
+    adds = sum(1 for ev in _EVENTS if ev.kind == "add")
+    assert final_k == k0 + adds, (final_k, k0, adds)
+    print(f"# chaos replay bit-deterministic: k {k0}->{final_k} "
+          f"({adds} adds, {kills} kills), "
+          f"{int(sess.traffic.migration_bytes)} migration bytes metered")
+
+    # ---- warm repair vs cold repartition on clones of ONE snapshot
+    # (state and jit shapes match exactly; first clone of each mode warms)
+    with tempfile.TemporaryDirectory() as td:
+        snapshot = Path(td) / "chaos_state.npz"
+        sess.stream.save(snapshot)
+        scfg_final = dataclasses.replace(
+            scfg, base=dataclasses.replace(base, k=final_k))
+        lost = int(np.argmax(np.bincount(sess.parts, minlength=final_k)))
+        _clone(snapshot, scfg_final, num_v).repair(lost, mode="warm")
+        with dispatch_counter() as counts:
+            warm_op = _clone(snapshot, scfg_final,
+                             num_v).repair(lost, mode="warm")
+        assert counts["elastic_repair_scan"] == 1, counts
+        _clone(snapshot, scfg_final, num_v).stream.repartition()
+        cold = _clone(snapshot, scfg_final, num_v)
+        t0 = time.perf_counter()
+        cold.stream.repartition()
+        cold_s = time.perf_counter() - t0
+    warm_s = warm_op.seconds
+    repair_speedup = cold_s / warm_s
+    print(f"# worst-case repair (machine {lost}, {warm_op.moved_u} rows): "
+          f"warm {warm_s:.3f}s vs cold repartition {cold_s:.3f}s = "
+          f"{repair_speedup:.1f}x")
+
+    # ---- final quality vs an oracle static partition at the final k
+    oracle_cfg = dataclasses.replace(base, k=final_k)
+    partition(g, oracle_cfg)                 # warm
+    oracle = partition(g, oracle_cfg)
+    streamed = score(g, sess.parts, final_k)["traffic_max"]
+    baseline = score(g, oracle.parts_u, final_k)["traffic_max"]
+    quality_pct = (streamed - baseline) / baseline * 100
+    print(f"# final traffic_max {streamed} vs oracle(k={final_k}) "
+          f"{baseline} ({quality_pct:+.2f}%)")
+
+    emit(rows, name)
+    emit_chaos_bench(rows, meta={
+        "graph": f"text_like({n_u}x{num_v})", "k0": k0, "k_final": final_k,
+        "chunks": chunks, "block_size": block, "adds": adds, "kills": kills,
+        "migration_bytes_total": int(sess.traffic.migration_bytes),
+        "repair_warm_s": warm_s, "repair_cold_s": cold_s,
+        "repair_speedup": repair_speedup,
+        "quality_vs_oracle_pct": quality_pct})
+    if max_quality_pct is not None:
+        assert quality_pct <= max_quality_pct, (
+            f"elastic traffic_max {quality_pct:+.2f}% vs oracle "
+            f"(limit {max_quality_pct}%)")
+    if min_repair_speedup is not None:
+        assert repair_speedup >= min_repair_speedup, (
+            f"warm repair only {repair_speedup:.1f}x vs cold repartition "
+            f"(need ≥{min_repair_speedup}x; rerun on an idle box if "
+            f"contended)")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--acceptance" in sys.argv:
+        run_acceptance()
+    else:
+        run()

@@ -58,10 +58,12 @@ def emit_pipeline_bench(rows: list[dict],
     path = ROOT / "BENCH_pipeline.json"
     payload = {"benchmark": "parsa_pipeline", **(meta or {}), "rows": rows}
     if path.exists():
-        # preserve the streaming benchmark's section (written by
-        # emit_stream_bench) — the two emitters own disjoint keys
+        # preserve the streaming/chaos benchmark sections (written by
+        # emit_stream_bench / emit_chaos_bench) — the emitters own
+        # disjoint keys
         old = json.loads(path.read_text())
-        for key in ("stream_rows", "stream_meta"):
+        for key in ("stream_rows", "stream_meta", "chaos_rows",
+                    "chaos_meta"):
             if key in old:
                 payload.setdefault(key, old[key])
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
@@ -90,6 +92,30 @@ def emit_stream_bench(rows: list[dict],
     payload["stream_meta"] = meta or {}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {path} (+{len(rows)} stream rows)")
+    return path
+
+
+def emit_chaos_bench(rows: list[dict],
+                     meta: dict | None = None) -> pathlib.Path:
+    """Append the elastic chaos benchmark's per-feed rows to the repo-root
+    ``BENCH_pipeline.json`` trajectory.
+
+    Each row is one chaos-scripted feed (``feed``, ``k``, ``events``,
+    ``traffic_max``, ``migration_bytes_total`` …); ``meta`` carries the
+    warm-repair vs cold-repartition wall clocks and the final quality gap
+    vs the oracle static partition.  Existing keys (pipeline, stream) are
+    preserved — chaos rows land under ``chaos_rows`` / ``chaos_meta`` so
+    re-runs replace rather than duplicate them.
+    """
+    path = ROOT / "BENCH_pipeline.json"
+    if path.exists():
+        payload = json.loads(path.read_text())
+    else:
+        payload = {"benchmark": "parsa_pipeline", "rows": []}
+    payload["chaos_rows"] = rows
+    payload["chaos_meta"] = meta or {}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path} (+{len(rows)} chaos rows)")
     return path
 
 

@@ -15,7 +15,7 @@ def main() -> None:
     args = ap.parse_args()
     scale = 0.35 if args.quick else 1.0
 
-    from . import (bench_embedding_traffic, bench_fig7_vary_k,
+    from . import (bench_chaos, bench_embedding_traffic, bench_fig7_vary_k,
                    bench_fig8_subgraphs, bench_fig9_global_init,
                    bench_fig10_scalability, bench_kernels, bench_stream,
                    bench_table2, bench_table34_dbpg)
@@ -30,6 +30,7 @@ def main() -> None:
         "embedding": lambda: bench_embedding_traffic.run(),
         "kernels": lambda: bench_kernels.run(scale=scale),
         "stream": lambda: bench_stream.run(scale=scale),
+        "chaos": lambda: bench_chaos.run(scale=scale),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -123,3 +123,44 @@ res_stream = session.result(refine_v=True)   # a full PartitionResult
 print("final streamed partition:", res_stream.metrics.as_dict())
 print("(one-chunk feeds are bit-identical to the device_scan backend; "
       "see benchmarks/bench_stream.py)")
+
+# --------------------------------------------------------------------------
+# elastic serving: the machine count k is a RUNTIME VARIABLE (repro.elastic).
+# Fleets are not static — capacity arrives mid-stream, machines die, some
+# straggle.  An ElasticSession wraps the stream and composes the pieces:
+# grow_k splits the largest part with one jitted scan, repair survives a
+# machine loss by warm-starting §4.4 from the SURVIVING packed sets (the
+# lost part's vertices re-assigned in one dispatch — no cold repartition),
+# and a seeded ChaosSchedule replays the same disaster deterministically.
+# Every move is metered in TrafficCounters.migration_bytes and gated by an
+# ElasticPolicy that weighs the one-time cost against steady-state savings.
+from repro.api import (ChaosEvent, ChaosSchedule, ElasticConfig,
+                       ElasticSession)
+
+print("\nelastic: grow the fleet 8->12 mid-stream, then lose a machine ...")
+chunks = ctr_like_stream(3000, 6000, chunks=6, nnz_per_row=20, churn=0.5,
+                         seed=0)
+ecfg = ElasticConfig(stream=ParsaStreamConfig(
+    base=ParsaConfig(k=8, backend="device_scan", refine_v=False, seed=0),
+    repartition="never"))
+chaos = ChaosSchedule([
+    ChaosEvent(feed=1, kind="add"),        # four machines join ...
+    ChaosEvent(feed=2, kind="add"),
+    ChaosEvent(feed=3, kind="add"),
+    ChaosEvent(feed=4, kind="add"),
+    ChaosEvent(feed=5, kind="kill"),       # ... then one dies (seeded pick)
+], seed=0)
+es = ElasticSession(ecfg, num_v=6000, chaos=chaos)
+for chunk in chunks:
+    upd = es.feed(chunk)                   # chaos events apply, then feed
+    print(f"  chunk {upd.chunk}: k={es.k}, "
+          f"traffic_max {upd.metrics.traffic_max}, migration so far "
+          f"{es.traffic.migration_bytes} bytes")
+for op in es.ops:
+    what = f"{op.kind}{' (' + op.mode + ')' if op.mode else ''}"
+    print(f"  {what}: k {op.k_before}->{op.k_after}, moved {op.moved_u} "
+          f"examples, {op.traffic.migration_bytes} migration bytes in "
+          f"{op.seconds * 1e3:.0f}ms")
+print("(warm repair re-assigns only the lost part's vertices — one scan "
+      "dispatch, ~10x faster than a cold repartition of the whole stream; "
+      "see benchmarks/bench_chaos.py --acceptance)")

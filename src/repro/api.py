@@ -65,6 +65,13 @@ __all__ = [
     "StreamSession",
     "StreamUpdate",
     "stream_partition",
+    # elastic surface (lazy — see __getattr__)
+    "ChaosEvent",
+    "ChaosSchedule",
+    "ElasticConfig",
+    "ElasticPolicy",
+    "ElasticSession",
+    "ThresholdPolicy",
 ]
 
 # Streaming lives in ``repro.stream`` (online incremental Parsa over
@@ -76,12 +83,21 @@ __all__ = [
 _STREAM_EXPORTS = ("ParsaStreamConfig", "StreamSession", "StreamUpdate",
                    "stream_partition")
 
+# The elastic serving layer (``repro.elastic``: runtime-variable k, chaos
+# injection, straggler-aware routing) is surfaced the same lazy way.
+_ELASTIC_EXPORTS = ("ChaosEvent", "ChaosSchedule", "ElasticConfig",
+                    "ElasticPolicy", "ElasticSession", "ThresholdPolicy")
+
 
 def __getattr__(name: str):
     if name in _STREAM_EXPORTS:
         from . import stream
 
         return getattr(stream, name)
+    if name in _ELASTIC_EXPORTS:
+        from . import elastic
+
+        return getattr(elastic, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 _SELECTS = ("size", "footprint")

@@ -70,6 +70,11 @@ class TrafficCounters:
     pulled_bytes: int = 0          # server→worker traffic (packed words)
     tasks: int = 0
     stale_pushes_missed: int = 0   # pushes invisible to a pull due to delay
+    migration_bytes: int = 0       # one-time recovery/re-shard traffic
+                                   #   (worker loss, grow/shrink, drift
+                                   #   repair) — split from push/pull so
+                                   #   steady-state and recovery traffic
+                                   #   stay separable in benchmark rows
 
     def __add__(self, other: "TrafficCounters") -> "TrafficCounters":
         """Component-wise accumulation — streaming sessions sum per-feed
@@ -81,7 +86,8 @@ class TrafficCounters:
             self.pushed_bytes + other.pushed_bytes,
             self.pulled_bytes + other.pulled_bytes,
             self.tasks + other.tasks,
-            self.stale_pushes_missed + other.stale_pushes_missed)
+            self.stale_pushes_missed + other.stale_pushes_missed,
+            self.migration_bytes + other.migration_bytes)
 
 
 @dataclasses.dataclass

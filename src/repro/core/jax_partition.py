@@ -721,6 +721,38 @@ def resolve_worker_devices(workers: int, devices: tuple | None = None) -> tuple:
     return tuple(devices[:workers])
 
 
+def _weighted_block_targets(weights: np.ndarray, nb: int) -> np.ndarray:
+    """Largest-remainder apportionment of ``nb`` real blocks proportional
+    to per-worker ``weights`` (higher weight ⇒ more blocks)."""
+    raw = weights / weights.sum() * nb
+    t = np.floor(raw).astype(np.int64)
+    short = nb - int(t.sum())
+    if short:
+        t[np.argsort(-(raw - t), kind="stable")[:short]] += 1
+    return t
+
+
+def _biased_perm(targets: np.ndarray, nb: int, nb_per: int,
+                 shuffle_rng: np.random.Generator | None) -> np.ndarray:
+    """Block→worker permutation handing worker ``w`` exactly
+    ``targets[w]`` real blocks (randomized across workers when a rng is
+    given) and topping every worker up to ``nb_per`` with trailing padding
+    blocks — the parity-safe no-ops ``_pad_block_stack`` appends — so the
+    sharded shapes stay identical while slow workers scan mostly padding.
+    """
+    real = (shuffle_rng.permutation(nb) if shuffle_rng is not None
+            else np.arange(nb, dtype=np.int64))
+    pad_ids = np.arange(nb, nb_per * targets.shape[0], dtype=np.int64)
+    out, r0, p0 = [], 0, 0
+    for t_w in targets:
+        t_w = int(t_w)
+        out.append(real[r0 : r0 + t_w])
+        out.append(pad_ids[p0 : p0 + nb_per - t_w])
+        r0 += t_w
+        p0 += nb_per - t_w
+    return np.concatenate(out)
+
+
 def _run_parallel_packed_scan(
     packed: PackedBlocks,
     s_masks: jax.Array,
@@ -733,6 +765,7 @@ def _run_parallel_packed_scan(
     interpret: bool | None,
     devices: tuple | None = None,
     shuffle_rng: np.random.Generator | None = None,
+    worker_weights: np.ndarray | None = None,
     count_name: str = "parallel_partition_scan",
 ) -> tuple[jax.Array, jax.Array, jax.Array, dict, np.ndarray | None]:
     """Shared Alg 4 core of ``parallel_blocked_partition_u_impl`` and the
@@ -742,21 +775,48 @@ def _run_parallel_packed_scan(
     assignment the stream uses), and run the cached shard_map pipeline
     against the (donated) live ``(s_masks, sizes)``.
 
+    ``worker_weights`` (workers-long, nonnegative, e.g. the inverse-EWMA
+    speeds from ``runtime.straggler.StragglerEWMA``) biases the block
+    distribution: real blocks are apportioned proportionally to weight
+    (largest remainder) and the shortfall on slow workers is filled with
+    parity-safe padding blocks, so every shard keeps the same shape —
+    shard_map's requirement — while a straggler's wall-clock share
+    shrinks.  The merge cadence is untouched: each worker still syncs
+    every ``merge_every`` blocks, so the τ ≡ merge_every − 1 staleness
+    bound of the bounded-delay model holds regardless of the bias.
+
     Returns ``(parts_blocks, s_out, sizes_out, traffic, perm)`` where
     ``parts_blocks`` is the device (workers, n_super, merge_every, B)
     output in *sharded* block order (flatten + ``argsort(perm)`` to
-    recover stack order when a permutation was drawn; ``perm`` is None
-    otherwise), and ``traffic`` is the push/pull dict in bitmask-word
-    bytes — the single source of the Alg 4 counter formulas.
+    recover stack order when a permutation was applied; ``perm`` is None
+    only when neither shuffle nor weights were given), and ``traffic`` is
+    the push/pull dict in bitmask-word bytes — the single source of the
+    Alg 4 counter formulas.
     """
     devices = resolve_worker_devices(workers, devices)
     nb = packed.valid.shape[0]
-    # blocks per worker, rounded up to whole merge groups
-    nb_per = -(-nb // workers)
-    nb_per = -(-nb_per // merge_every) * merge_every
-    packed = _pad_block_stack(packed, nb_per * workers)
-    total = nb_per * workers
-    perm = shuffle_rng.permutation(total) if shuffle_rng is not None else None
+    if worker_weights is not None and workers > 1:
+        w = np.asarray(worker_weights, np.float64)
+        if w.shape != (workers,):
+            raise ValueError(
+                f"worker_weights must have shape ({workers},), got {w.shape}")
+        if not np.all(np.isfinite(w)) or np.any(w < 0) or w.sum() <= 0:
+            raise ValueError(
+                "worker_weights must be finite, nonnegative, with a "
+                "positive sum")
+        targets = _weighted_block_targets(w, nb)
+        nb_per = max(int(targets.max()), 1)
+        nb_per = -(-nb_per // merge_every) * merge_every
+        packed = _pad_block_stack(packed, nb_per * workers)
+        perm = _biased_perm(targets, nb, nb_per, shuffle_rng)
+    else:
+        # blocks per worker, rounded up to whole merge groups
+        nb_per = -(-nb // workers)
+        nb_per = -(-nb_per // merge_every) * merge_every
+        packed = _pad_block_stack(packed, nb_per * workers)
+        total = nb_per * workers
+        perm = (shuffle_rng.permutation(total) if shuffle_rng is not None
+                else None)
 
     def shard(x):
         if perm is not None:

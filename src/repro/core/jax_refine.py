@@ -107,6 +107,14 @@ def need_masks(
     device array (no host round trip for device backends).
     """
     W = (graph.num_v + 31) // 32
+    # the scatter's sort key is partition·num_v + column; its maximum is
+    # k·num_v − 1 and silently wraps past int32, corrupting the need
+    # matrix — refuse loudly instead (ROADMAP known limit, now checked)
+    if k * graph.num_v > 2**31 and not jax.config.jax_enable_x64:
+        raise ValueError(
+            f"need-pack sort key range k*num_v = {k}*{graph.num_v} = "
+            f"{k * graph.num_v} exceeds int32 (max key k*num_v-1 must be "
+            f"< 2^31); enable jax_enable_x64 for this regime")
     if graph.num_edges == 0:
         return jnp.zeros((k, W), jnp.int32)
     edge_rows = np.repeat(

@@ -109,8 +109,10 @@ class PSCluster:
         self.rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------
-    def apply_placement(self, parts_u: np.ndarray, parts_v: np.ndarray) -> dict:
-        """Apply a new Parsa placement mid-run (streaming drift repair).
+    def apply_placement(self, parts_u: np.ndarray, parts_v: np.ndarray,
+                        k: int | None = None) -> dict:
+        """Apply a new Parsa placement mid-run (streaming drift repair, or
+        an elastic grow/shrink/repair that changes the machine count).
 
         Re-shards example rows across workers and weight ownership across
         servers, metering the one-time re-sharding traffic in the same
@@ -121,9 +123,19 @@ class PSCluster:
         vector, so training continues exactly where it left off; the push
         key caches are invalidated (working sets changed, keys must be
         re-sent).  Returns the move counts and metered bytes.
+
+        ``k`` changes the machine count (``repro.elastic``): departing
+        shards are torn down after their rows/weights are re-metered onto
+        their new hosts, spawned shards start with cold pull caches (their
+        first pull fetches the full working set, which the training loop
+        meters as ordinary pull traffic).  Labels in ``parts_u``/
+        ``parts_v`` must already be < the new ``k``.
         """
         parts_u = np.asarray(parts_u)
         parts_v = np.asarray(parts_v)
+        new_k = self.k if k is None else int(k)
+        if new_k < 1:
+            raise ValueError(f"k must be >= 1, got {new_k}")
         if parts_u.shape != self.parts_u.shape:
             raise ValueError(
                 f"parts_u shape {parts_u.shape} != cluster's "
@@ -132,32 +144,61 @@ class PSCluster:
             raise ValueError(
                 f"parts_v shape {parts_v.shape} != cluster's "
                 f"{self.parts_v.shape}")
+        if parts_u.size and int(parts_u.max()) >= new_k:
+            raise ValueError(
+                f"parts_u labels reach {int(parts_u.max())} but k={new_k}")
+        if parts_v.size and int(parts_v.max()) >= new_k:
+            raise ValueError(
+                f"parts_v labels reach {int(parts_v.max())} but k={new_k}")
         new_owner = parts_v.copy()
         rr = np.flatnonzero(new_owner < 0)
-        new_owner[rr] = rr % self.k
+        new_owner[rr] = rr % new_k
         bytes_before = self.meter.total
-        k = self.k
+        # src labels live in the old fleet, dst labels in the new one —
+        # meter over the union so grow/shrink transfers land on both ends
+        km = max(self.k, new_k)
+        if km > self.meter.per_machine.shape[0]:
+            self.meter.per_machine = np.concatenate(
+                [self.meter.per_machine,
+                 np.zeros(km - self.meter.per_machine.shape[0], np.int64)])
         # moved example rows: delta-encoded batch re-shard, 8 B per entry
         # (4 B key + 4 B value); per-(src, dst) byte totals in two
         # vectorized bincount passes instead of k² full-array masks
         deg = np.diff(self.graph.u_indptr)
-        pair_u = self.parts_u.astype(np.int64) * k + parts_u
+        pair_u = self.parts_u.astype(np.int64) * km + parts_u
         row_bytes = np.bincount(pair_u, weights=deg * 8.0,
-                                minlength=k * k).reshape(k, k)
+                                minlength=km * km).reshape(km, km)
         moved_rows = int((self.parts_u != parts_u).sum())
         # moved weights: value + key per parameter changing its server
         moved_w = self.owner != new_owner
         moved_weights = int(moved_w.sum())
-        pair_v = self.owner[moved_w].astype(np.int64) * k + new_owner[moved_w]
-        w_bytes = np.bincount(pair_v, minlength=k * k).reshape(k, k) * 8
-        for i in range(k):
-            for j in range(k):
+        pair_v = self.owner[moved_w].astype(np.int64) * km + new_owner[moved_w]
+        w_bytes = np.bincount(pair_v, minlength=km * km).reshape(km, km) * 8
+        for i in range(km):
+            for j in range(km):
                 if i == j:
                     continue
                 nbytes = int(row_bytes[i, j]) + int(w_bytes[i, j])
                 if nbytes:
                     self.meter.add(i, j, nbytes)
-        # rebuild the sharded state for the new placement
+        # rebuild the sharded state for the new placement (shard teardown /
+        # spawn when the machine count changed)
+        if new_k != self.k:
+            if new_k > self.k:
+                self._pull_cache.extend(
+                    np.zeros(self.graph.num_v, np.float32)
+                    for _ in range(new_k - self.k))
+            else:
+                del self._pull_cache[new_k:]
+            self.meter.per_machine = np.concatenate(
+                [self.meter.per_machine[:new_k],
+                 np.zeros(max(0, new_k - self.meter.per_machine.shape[0]),
+                          np.int64)])
+            self._keys_sent = np.zeros((new_k, new_k), dtype=bool)
+            self.k = new_k
+        else:
+            self.meter.per_machine = self.meter.per_machine[:new_k]
+            self._keys_sent[:] = False
         self.parts_u = parts_u.copy()
         self.parts_v = parts_v.copy()
         self.owner = new_owner
@@ -169,7 +210,6 @@ class PSCluster:
             self.rows.append(rows)
             self.batches.append(
                 SparseBatch.from_graph(self.graph, rows, labels))
-        self._keys_sent[:] = False
         # error-feedback residuals are supported on the OLD working sets;
         # under the new need masks the stranded coordinates could neither
         # be sent nor dropped — start the accumulators clean instead

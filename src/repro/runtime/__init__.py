@@ -1,2 +1,6 @@
 from .fault import TrainLoop, FaultConfig  # noqa: F401
-from .straggler import BoundedDelayAccumulator, StragglerConfig  # noqa: F401
+from .straggler import (  # noqa: F401
+    BoundedDelayAccumulator,
+    StragglerConfig,
+    StragglerEWMA,
+)

@@ -58,3 +58,56 @@ class BoundedDelayAccumulator:
         self.pending = self.zero
         self.step += 1
         return out
+
+
+class StragglerEWMA:
+    """EWMA of per-worker scan times → block-assignment weights.
+
+    The elastic stream composes this with the bounded-delay model above:
+    instead of letting a slow worker accumulate staleness toward the τ
+    clamp, the scheduler *prevents* the lag by handing it fewer blocks —
+    ``weights()`` are inverse-EWMA speeds, consumed by
+    ``_run_parallel_packed_scan(worker_weights=...)``.  ``floor`` bounds
+    how far a worker can be starved (a 10× straggler still gets ≥ floor ×
+    its fair share), so a recovered worker keeps receiving enough blocks
+    for its EWMA to re-converge instead of being written off forever.
+    """
+
+    def __init__(self, workers: int, alpha: float = 0.3,
+                 floor: float = 0.1):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if not 0.0 < floor <= 1.0:
+            raise ValueError(f"floor must be in (0, 1], got {floor}")
+        self.workers = workers
+        self.alpha = alpha
+        self.floor = floor
+        self._ewma = np.zeros(workers, np.float64)   # lazy-seeded
+        self._seen = np.zeros(workers, bool)
+
+    def update(self, times: np.ndarray) -> None:
+        """Fold one round of per-worker wall-clock times (seconds; NaN or
+        ≤0 entries mean "no observation this round" and are skipped)."""
+        times = np.asarray(times, np.float64)
+        if times.shape != (self.workers,):
+            raise ValueError(
+                f"times must have shape ({self.workers},), got {times.shape}")
+        ok = np.isfinite(times) & (times > 0)
+        fresh = ok & ~self._seen
+        self._ewma[fresh] = times[fresh]             # seed from first sample
+        cont = ok & self._seen
+        self._ewma[cont] += self.alpha * (times[cont] - self._ewma[cont])
+        self._seen |= ok
+
+    def weights(self) -> np.ndarray:
+        """Per-worker speed weights (mean 1): inverse EWMA time, floored
+        at ``floor`` × the fair share.  Workers never observed yet get the
+        observed mean speed (no penalty before evidence)."""
+        w = np.ones(self.workers, np.float64)
+        if self._seen.any():
+            speed = 1.0 / self._ewma[self._seen]
+            w[self._seen] = speed / speed.mean()
+        w = np.maximum(w, self.floor)
+        return w / w.mean()

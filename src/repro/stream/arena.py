@@ -121,6 +121,25 @@ class StreamArena:
         self._nnz += e
         return start, start + n
 
+    # --------------------------------------------------------- elasticity
+    def set_partition_state(self, s_masks, sizes, k: int) -> None:
+        """Swap in new live partition state, possibly at a different
+        machine count ``k`` — capacity-stable: the packed width stays
+        ``W_cap`` so the per-k jit cache survives grow/shrink/repair.
+        Callers own the padding-bit invariant (columns ≥ ``num_v`` zero);
+        masks derived from existing rows via OR/delta or produced by the
+        feed scan preserve it by construction."""
+        if k <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        if s_masks.shape != (k, self.W_cap):
+            raise ValueError(
+                f"s_masks must be ({k}, {self.W_cap}), got {s_masks.shape}")
+        if sizes.shape != (k,):
+            raise ValueError(f"sizes must be ({k},), got {sizes.shape}")
+        self.k = k
+        self.s_masks = s_masks
+        self.sizes = sizes
+
     # ------------------------------------------------------------- views
     def graph(self) -> BipartiteGraph:
         """Snapshot of everything fed so far (trimmed views, logical V)."""

@@ -19,8 +19,9 @@ on one machine — exactly the failure mode a repartition fixes.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+
+import numpy as np
 
 from ..core.costs import PartitionMetrics
 
@@ -32,17 +33,24 @@ class DriftDecision:
     """One tracker update: the imbalance observed and whether it tripped."""
 
     drift: float               # max/mean footprint ratio this feed
-    baseline: float            # best ratio inside the sliding window
+    baseline: float            # windowed-mean ratio (filled entries only)
     repartition: bool
 
 
 class DriftTracker:
     """Sliding-window drift detector over per-feed ``PartitionMetrics``.
 
-    ``window`` is how many recent feeds the baseline minimum spans;
+    ``window`` is how many recent feeds the baseline mean spans;
     ``threshold`` the multiplicative degradation that trips a repartition
-    (1.0 = trip on any strict degradation past the windowed best);
+    (1.0 = trip on any strict degradation past the windowed mean);
     ``min_feeds`` suppresses triggers until enough history exists.
+
+    Cold-window behavior: the ring buffer is seeded *lazily* — the
+    baseline is the mean over the entries actually observed so far, never
+    over preallocated zeros.  A naive fixed-window mean would average in
+    zeros before the window fills, deflating the baseline and tripping a
+    repartition on the first feeds of every stream (and right after every
+    ``reset``), exactly when a repartition is pointless.
     """
 
     def __init__(self, window: int = 8, threshold: float = 1.15,
@@ -56,17 +64,26 @@ class DriftTracker:
         self.window = window
         self.threshold = threshold
         self.min_feeds = min_feeds
-        self._history: collections.deque[float] = collections.deque(
-            maxlen=window)
+        self._ring = np.zeros(window, np.float64)
+        self._count = 0      # observations since the last reset
+
+    def _baseline(self, drift: float) -> float:
+        filled = min(self._count, self.window)
+        if filled == 0:
+            return drift     # lazy seed: first observation is its own bar
+        if filled < self.window:
+            return float(self._ring[:filled].mean())
+        return float(self._ring.mean())
 
     def update(self, metrics: PartitionMetrics) -> DriftDecision:
         """Record one feed's metrics; decide whether to repartition."""
         total = max(int(metrics.traffic_sum), 1)
         drift = metrics.traffic_max * metrics.k / total
-        baseline = min(self._history) if self._history else drift
-        trip = (len(self._history) >= self.min_feeds
+        baseline = self._baseline(drift)
+        trip = (self._count >= self.min_feeds
                 and drift > self.threshold * baseline)
-        self._history.append(drift)
+        self._ring[self._count % self.window] = drift
+        self._count += 1
         if trip:
             self.reset()
         return DriftDecision(drift=drift, baseline=baseline, repartition=trip)
@@ -74,4 +91,4 @@ class DriftTracker:
     def reset(self) -> None:
         """Forget the window (called after a repartition relevels the
         baseline — the post-repartition ratio starts a fresh window)."""
-        self._history.clear()
+        self._count = 0

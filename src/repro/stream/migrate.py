@@ -12,10 +12,12 @@ label-invariant, so the relabeled partition is the same partition, but
 machine j now keeps the new part whose working set overlaps its resident
 set most.  What still differs after relabeling is the true migration cost,
 metered in the same units as ``TrafficCounters`` (bitmask-word bytes, 4
-bytes per 32 parameters): ``pushed_bytes`` counts the packed words each
-machine must newly acquire (``packed_delta(new, old)``), ``pulled_bytes``
-the words it can retire, and moved U rows ride along as delta-encoded
-example traffic when degrees are provided.
+bytes per 32 parameters) and reported in its ``migration_bytes`` field so
+recovery traffic never pollutes the steady-state push/pull counters: the
+packed words each machine must newly acquire (``packed_delta(new, old)``),
+the words it can retire, and moved U rows as delta-encoded example traffic
+when degrees are provided.  ``MigrationPlan.acquired_bytes`` /
+``retired_bytes`` keep the two directions separable.
 """
 from __future__ import annotations
 
@@ -43,7 +45,9 @@ class MigrationPlan:
     s_masks: np.ndarray         # (k, W) int32 relabeled new server sets
     moved_u: int                # examples whose machine changed
     kept_overlap: int           # Σ_i M[i, assign[i]] — parameters retained
-    traffic: TrafficCounters    # migration bytes, TrafficCounters units
+    traffic: TrafficCounters    # migration_bytes, TrafficCounters units
+    acquired_bytes: int = 0     # words newly hosted (+ moved example rows)
+    retired_bytes: int = 0      # words machines may drop
 
 
 def _greedy_match(M: np.ndarray) -> np.ndarray:
@@ -94,16 +98,19 @@ def plan_migration(
     moved_u = int(moved.sum())
     gained = int(np.count_nonzero(packed_delta(masks, old_masks)))
     dropped = int(np.count_nonzero(packed_delta(old_masks, masks)))
-    pushed = 4 * gained
+    acquired = 4 * gained
     if degrees is not None:
         degrees = np.asarray(degrees)
-        pushed += 4 * int(degrees[:n_common][moved].sum())
+        acquired += 4 * int(degrees[:n_common][moved].sum())
+    retired = 4 * dropped
     return MigrationPlan(
         assign=assign,
         parts_u=parts,
         s_masks=masks,
         moved_u=moved_u,
         kept_overlap=int(M[np.arange(k), assign].sum()),
-        traffic=TrafficCounters(pushed_bytes=pushed, pulled_bytes=4 * dropped,
-                                tasks=1),
+        traffic=TrafficCounters(tasks=1,
+                                migration_bytes=acquired + retired),
+        acquired_bytes=acquired,
+        retired_bytes=retired,
     )

@@ -165,10 +165,17 @@ class StreamSession:
         self._pulled = 0
         self._tasks = 0
         self._stale = 0
+        self._migrated = 0
 
     # ------------------------------------------------------------- feeding
-    def feed(self, chunk: BipartiteGraph) -> StreamUpdate:
+    def feed(self, chunk: BipartiteGraph,
+             worker_weights: np.ndarray | None = None) -> StreamUpdate:
         """Assign one arriving chunk of U vertices against the live sets.
+
+        ``worker_weights`` (parallel feeds only) biases the randomized
+        block→worker assignment toward faster workers — see
+        ``_run_parallel_packed_scan``; the elastic layer supplies an EWMA
+        of per-worker scan times here so stragglers receive fewer blocks.
 
         One jitted scan dispatch (plus one popcount-metrics dispatch) per
         call, O(1) in both stream length and chunk count — asserted via
@@ -212,7 +219,8 @@ class StreamSession:
                     interpret=base.interpret)
                 flat = np.asarray(parts_blocks).reshape(-1)[:n]
             else:
-                flat, s_out, sz_out, traffic = self._feed_parallel(packed, n)
+                flat, s_out, sz_out, traffic = self._feed_parallel(
+                    packed, n, worker_weights)
             # scan succeeded — commit: live sets, CSR append, parts
             self.arena.s_masks, self.arena.sizes = s_out, sz_out
             u_start, u_stop = self.arena.append(chunk)
@@ -243,7 +251,8 @@ class StreamSession:
             migration=migration, traffic=traffic, timings=timings,
             dispatches=dispatches)
 
-    def _feed_parallel(self, packed, n: int):
+    def _feed_parallel(self, packed, n: int,
+                       worker_weights: np.ndarray | None = None):
         """Fan one chunk's blocks across the worker mesh: the shared Alg 4
         core (``_run_parallel_packed_scan``) with randomized block→worker
         assignment, against the live donated (S, sizes)."""
@@ -256,7 +265,8 @@ class StreamSession:
                 packed, self.arena.s_masks, self.arena.sizes, k=self.k,
                 workers=workers, merge_every=base.merge_every,
                 use_kernel=base.use_kernel, interpret=base.interpret,
-                shuffle_rng=shuffle, count_name="stream_feed_scan")
+                shuffle_rng=shuffle, worker_weights=worker_weights,
+                count_name="stream_feed_scan")
         B = packed.valid.shape[1]
         by_block = np.asarray(parts_blocks).reshape(-1, B)
         if perm is not None:
@@ -289,13 +299,14 @@ class StreamSession:
         self._pulled += t.pulled_bytes
         self._tasks += t.tasks
         self._stale += t.stale_pushes_missed
+        self._migrated += t.migration_bytes
 
     @property
     def traffic(self) -> TrafficCounters:
         """Cumulative session traffic: parallel-feed push/pull plus metered
         migration bytes, all in bitmask-word-byte units."""
         return TrafficCounters(self._pushed, self._pulled, self._tasks,
-                               self._stale)
+                               self._stale, self._migrated)
 
     # ------------------------------------------------------------- metrics
     def _popcount_metrics(self) -> PartitionMetrics:
@@ -359,6 +370,45 @@ class StreamSession:
         self.tracker.reset()
         return plan
 
+    # ----------------------------------------------------------- elasticity
+    def apply_partition_state(self, parts_u: np.ndarray, s_masks,
+                              sizes: np.ndarray | None = None,
+                              k: int | None = None) -> None:
+        """Commit an externally computed partition state, possibly with a
+        different machine count ``k`` — the mid-run hook the elastic layer
+        (``repro.elastic``) uses for grow/shrink/repair.
+
+        ``s_masks`` must already be capacity-stable — shaped
+        ``(k, arena.W_cap)`` with the padding-bit invariant intact (bits at
+        columns ≥ ``num_v`` zero) — so subsequent feeds hit the same jit
+        cache entry per k.  ``sizes`` defaults to the bincount of
+        ``parts_u``.  The drift tracker resets: its baseline compares
+        metrics at a fixed k, which just changed (or the partition was
+        rebuilt in place).
+        """
+        import jax.numpy as jnp
+
+        parts_u = np.asarray(parts_u, np.int32)
+        if parts_u.shape[0] != self.arena.num_u:
+            raise ValueError(
+                f"parts_u covers {parts_u.shape[0]} U rows, arena holds "
+                f"{self.arena.num_u}")
+        new_k = self.k if k is None else int(k)
+        masks_np = np.asarray(s_masks)
+        if masks_np.shape != (new_k, self.arena.W_cap):
+            raise ValueError(
+                f"s_masks must be capacity-stable ({new_k}, "
+                f"{self.arena.W_cap}), got {masks_np.shape}")
+        if sizes is None:
+            sizes = np.bincount(parts_u, minlength=new_k).astype(np.int32)
+        self.k = new_k
+        self.arena.set_partition_state(jnp.asarray(masks_np),
+                                       jnp.asarray(np.asarray(sizes,
+                                                              np.int32)),
+                                       new_k)
+        self._parts_buf[: parts_u.shape[0]] = parts_u
+        self.tracker.reset()
+
     # ------------------------------------------------------------ snapshot
     def save(self, path) -> None:
         """Snapshot the FULL stream state — arena (graph + live sets),
@@ -375,7 +425,7 @@ class StreamSession:
             n_feeds=self.n_feeds, repartitions=self.repartitions,
             need_exact=self._need_exact,
             traffic=np.asarray([self._pushed, self._pulled, self._tasks,
-                                self._stale], np.int64),
+                                self._stale, self._migrated], np.int64),
             rng_state=np.frombuffer(
                 json.dumps(self._rng.bit_generator.state).encode(),
                 dtype=np.uint8))
@@ -398,8 +448,10 @@ class StreamSession:
         session.n_feeds = int(z["n_feeds"])
         session.repartitions = int(z["repartitions"])
         session._need_exact = bool(z["need_exact"])
-        session._pushed, session._pulled, session._tasks, session._stale = (
-            int(x) for x in z["traffic"])
+        # pre-migration_bytes snapshots carry 4 counters, current ones 5
+        t = [int(x) for x in z["traffic"]] + [0]
+        (session._pushed, session._pulled, session._tasks, session._stale,
+         session._migrated) = t[:5]
         session._rng.bit_generator.state = json.loads(
             bytes(z["rng_state"]).decode())
         return session
@@ -437,7 +489,9 @@ class StreamSession:
         return PartitionResult(
             parts_u=self.parts.copy(), parts_v=parts_v, num_v=g.num_v,
             k=self.k, config=base, metrics=metrics, timings=timings,
-            traffic=self.traffic if self._tasks or self._pushed else None,
+            traffic=(self.traffic
+                     if self._tasks or self._pushed or self._migrated
+                     else None),
             _packed_sets=s_logical)
 
 

@@ -1,0 +1,398 @@
+"""repro.elastic: grow/shrink/repair determinism + O(1) dispatches,
+chaos schedule replay, policy gating, straggler EWMA biasing, PSCluster
+shard teardown/spawn, and the elastic satellites (need-pack int32
+ceiling, drift cold window)."""
+import numpy as np
+import pytest
+
+from repro.api import ParsaConfig, ParsaStreamConfig
+from repro.api_backends import TrafficCounters
+from repro.core.bipartite import BipartiteGraph
+from repro.core.costs import evaluate, need_matrix
+from repro.core.jax_partition import (
+    _biased_perm,
+    _weighted_block_targets,
+    dispatch_counter,
+)
+from repro.elastic import (
+    ChaosEvent,
+    ChaosSchedule,
+    ElasticConfig,
+    ElasticPolicy,
+    ElasticSession,
+    FleetState,
+    ThresholdPolicy,
+)
+from repro.graphs import ctr_like, ctr_like_stream
+from repro.runtime import StragglerEWMA
+from repro.stream.drift import DriftTracker
+
+
+def _chunks(n=4, rows=600, num_v=1500, seed=1):
+    return ctr_like_stream(rows, num_v, chunks=n, nnz_per_row=10,
+                           churn=0.3, seed=seed)
+
+
+def _ecfg(k=4, workers=1, **kw):
+    if workers > 1:
+        base = ParsaConfig(k=k, backend="parallel_device", workers=workers,
+                           block_size=32, merge_every=1, refine_v=False)
+    else:
+        base = ParsaConfig(k=k, backend="device_scan", block_size=64,
+                           refine_v=False)
+    stream = ParsaStreamConfig(base=base, repartition="never",
+                               repartition_frac=kw.pop("repartition_frac",
+                                                       0.02))
+    return ElasticConfig(stream=stream, min_k=2, max_k=16, **kw)
+
+
+def _fed_session(cfg=None, n=3, **kw):
+    cfg = cfg or _ecfg(**kw)
+    sess = ElasticSession(cfg, num_v=1500)
+    for ch in _chunks(n):
+        sess.feed(ch)
+    return sess
+
+
+# ---------------------------------------------------------- elastic ops
+def test_grow_one_dispatch_and_consistency():
+    sess = _fed_session()
+    k0 = sess.k
+    before = np.bincount(sess.parts, minlength=k0)
+    with dispatch_counter() as counts:
+        op = sess.grow_k(force=True)
+    assert op.committed and sess.k == k0 + 1
+    assert counts["elastic_grow_scan"] == 1
+    assert sum(v for n, v in counts.items()
+               if "scan" in n) == 1, "grow must be O(1) jitted dispatches"
+    after = np.bincount(sess.parts, minlength=sess.k)
+    # only the split source lost rows; the new machine hosts the rest
+    assert after[op.machine] + after[k0] == before[op.machine]
+    assert op.traffic.migration_bytes > 0
+    # live masks stay exact N(U_i): popcount metrics match the oracle
+    g = sess.stream.arena.graph()
+    want = evaluate(g, sess.parts, None, sess.k)
+    assert sess.stream._popcount_metrics().as_dict() == want.as_dict()
+
+
+def test_shrink_zero_scans_and_consistency():
+    sess = _fed_session()
+    k0 = sess.k
+    with dispatch_counter() as counts:
+        op = sess.shrink_k(force=True)
+    assert op.committed and sess.k == k0 - 1
+    assert sum(v for n, v in counts.items() if "scan" in n) == 0
+    assert op.traffic.migration_bytes > 0
+    assert sess.parts.max() < sess.k
+    # merged masks = OR of the merged parts' need sets: still exact
+    g = sess.stream.arena.graph()
+    want = need_matrix(g, sess.parts, sess.k)
+    got = sess.stream.arena.masks_np()
+    from repro.kernels.parsa_cost import unpack_bitmask
+
+    assert np.array_equal(unpack_bitmask(got, g.num_v), want)
+
+
+def test_repair_one_dispatch_refills_lost_machine():
+    sess = _fed_session(repartition_frac=0.0)
+    lost = 1
+    lost_rows = int((sess.parts == lost).sum())
+    assert lost_rows > 0
+    with dispatch_counter() as counts:
+        op = sess.repair(lost)
+    assert counts["elastic_repair_scan"] == 1
+    assert sum(v for n, v in counts.items() if "scan" in n) == 1
+    assert op.mode == "warm" and op.moved_u == lost_rows
+    assert op.traffic.migration_bytes > 0
+    # with frac=0 the live sets stay exact need sets after the repair
+    g = sess.stream.arena.graph()
+    want = evaluate(g, sess.parts, None, sess.k)
+    assert sess.stream._popcount_metrics().as_dict() == want.as_dict()
+    assert sess.traffic.migration_bytes >= op.traffic.migration_bytes
+
+
+def test_ops_bit_deterministic_under_fixed_seed():
+    def run():
+        sess = _fed_session()
+        ops = [sess.grow_k(force=True), sess.repair(0),
+               sess.shrink_k(force=True)]
+        return sess, ops
+
+    s1, o1 = run()
+    s2, o2 = run()
+    assert s1.k == s2.k
+    assert np.array_equal(s1.parts, s2.parts)
+    assert np.array_equal(s1.stream.arena.masks_np(),
+                          s2.stream.arena.masks_np())
+    for a, b in zip(o1, o2):
+        assert a.traffic == b.traffic and a.moved_u == b.moved_u
+
+
+def test_policy_veto_leaves_state_untouched():
+    class NoPolicy:
+        min_partitions, max_partitions = 2, 16
+
+        def grow(self, state):
+            return False
+
+        def shrink(self, state):
+            return False
+
+        def repair(self, state):
+            return "warm"
+
+        def rebalance(self, state, weights):
+            return None
+
+    cfg = _ecfg()
+    sess = ElasticSession(cfg, num_v=1500, policy=NoPolicy())
+    for ch in _chunks(2):
+        sess.feed(ch)
+    parts0 = sess.parts.copy()
+    masks0 = sess.stream.arena.masks_np().copy()
+    traffic0 = sess.traffic
+    op_g, op_s = sess.grow_k(), sess.shrink_k()
+    assert not op_g.committed and not op_s.committed
+    assert sess.k == 4
+    assert np.array_equal(sess.parts, parts0)
+    assert np.array_equal(sess.stream.arena.masks_np(), masks0)
+    # vetoed candidates meter nothing into the session
+    assert sess.traffic == traffic0
+
+
+def test_threshold_policy_budget_gate():
+    pol = ThresholdPolicy(min_k=2, max_k=8, budget_feeds=10)
+    cheap = FleetState(4, 5, np.ones(4), np.ones(4),
+                       migration_bytes=50, projected_savings=10)
+    dear = FleetState(4, 5, np.ones(4), np.ones(4),
+                      migration_bytes=5000, projected_savings=10)
+    assert pol.grow(cheap) and not pol.grow(dear)
+    assert pol.shrink(cheap) and not pol.shrink(dear)
+    at_max = FleetState(8, 5, np.ones(8), np.ones(8), 0, 10**9)
+    at_min = FleetState(2, 5, np.ones(2), np.ones(2), 0, 10**9)
+    assert not pol.grow(at_max) and not pol.shrink(at_min)
+    assert pol.repair(cheap) == "warm"
+    assert isinstance(ThresholdPolicy(), ElasticPolicy)
+
+
+# ------------------------------------------------------------- chaos
+def test_chaos_schedule_deterministic_and_validated():
+    ev = [ChaosEvent(3, "kill"), ChaosEvent(1, "straggle", factor=2.0),
+          ChaosEvent(1, "add")]
+    s1, s2 = ChaosSchedule(ev, seed=9), ChaosSchedule(ev, seed=9)
+    assert s1.events == s2.events          # None targets resolve identically
+    assert [e.kind for e in s1.at(1)] == ["straggle", "add"]
+    assert s1.at(1) == []                  # served exactly once
+    assert s1.remaining == 1
+    s1.reset()
+    assert s1.remaining == 3
+    with pytest.raises(ValueError, match="kind"):
+        ChaosEvent(0, "explode")
+    with pytest.raises(ValueError, match="factor"):
+        ChaosEvent(0, "straggle", factor=1.0)
+    with pytest.raises(ValueError, match="feed"):
+        ChaosEvent(-1, "kill")
+
+
+def test_chaos_run_bit_deterministic():
+    chaos_events = [ChaosEvent(1, "kill", 1), ChaosEvent(2, "add"),
+                    ChaosEvent(3, "straggle", 0, 4.0)]
+
+    def run():
+        sess = ElasticSession(_ecfg(), num_v=1500,
+                              chaos=ChaosSchedule(chaos_events, seed=5))
+        for ch in _chunks(4):
+            sess.feed(ch)
+        return sess
+
+    s1, s2 = run(), run()
+    assert s1.k == s2.k
+    assert np.array_equal(s1.parts, s2.parts)
+    assert s1.traffic == s2.traffic
+    kinds = [(o.kind, o.committed) for o in s1.ops]
+    assert ("repair", True) in kinds and ("grow", True) in kinds
+
+
+# --------------------------------------------------- straggler routing
+def test_weighted_block_targets_apportionment():
+    t = _weighted_block_targets(np.array([1.0, 1.0, 4.0, 2.0]), 16)
+    assert t.sum() == 16
+    assert t[2] == t.max() and t[2] == 8
+    # degenerate: one worker owns everything
+    t = _weighted_block_targets(np.array([0.0, 1.0]), 7)
+    assert list(t) == [0, 7]
+
+
+def test_biased_perm_routes_padding_to_slow_workers():
+    targets = np.array([1, 7])
+    nb, nb_per = 8, 7
+    perm = _biased_perm(targets, nb, nb_per, None)
+    assert perm.size == nb_per * 2
+    shard = perm.reshape(2, nb_per)
+    # worker 0 (slow): 1 real block + 6 padding; worker 1: 7 real
+    assert (shard[0] < nb).sum() == 1 and (shard[1] < nb).sum() == 7
+    assert sorted(p for p in perm if p < nb) == list(range(nb))
+
+
+def test_straggler_ewma_seeds_lazily_and_floors():
+    e = StragglerEWMA(4, alpha=0.5, floor=0.25)
+    assert np.allclose(e.weights(), 1.0)      # no evidence, no penalty
+    e.update([1.0, np.nan, 1.0, 1.0])         # missing sample skipped
+    assert np.allclose(e.weights(), 1.0)
+    e.update([1.0, 1.0, 100.0, 1.0])
+    w = e.weights()
+    assert w.argmin() == 2
+    assert w[2] >= 0.25 / w.mean() * 0  # floored (never starved to zero)
+    assert w[2] > 0
+    with pytest.raises(ValueError, match="shape"):
+        e.update([1.0])
+
+
+def test_parallel_feed_with_bias_covers_all_rows():
+    pytest.importorskip("jax")
+    import jax
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (XLA_FLAGS host device count)")
+    workers = min(4, len(jax.devices()))
+    sess = _fed_session(cfg=_ecfg(workers=workers), n=3)
+    sess._straggle[0] = 8.0               # synthetic straggler
+    for ch in _chunks(2, seed=3):
+        upd = sess.feed(ch)
+    assert sess.parts.shape[0] == sess.stream.arena.num_u
+    assert np.bincount(sess.parts, minlength=sess.k).sum() == \
+        sess.parts.shape[0]
+    w = sess.ewma.weights()
+    assert w.argmin() == 0, "straggled worker must get the lowest weight"
+
+
+# ------------------------------------------------------------ PS bridge
+def test_ps_cluster_k_change_teardown_spawn():
+    from repro.ml.dbpg import DBPGConfig
+    from repro.ml.ps import PSCluster
+
+    g = ctr_like(200, 400, nnz_per_row=8, seed=2)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 2, g.num_u).astype(np.float32)
+    parts_u = rng.integers(0, 3, g.num_u).astype(np.int32)
+    parts_v = rng.integers(0, 3, g.num_v).astype(np.int32)
+    ps = PSCluster(g, labels, parts_u, parts_v, 3, DBPGConfig())
+    ps.run(2)
+    # grow 3 → 5
+    pu5 = rng.integers(0, 5, g.num_u).astype(np.int32)
+    pv5 = rng.integers(0, 5, g.num_v).astype(np.int32)
+    rep = ps.apply_placement(pu5, pv5, k=5)
+    assert ps.k == 5 and len(ps.batches) == 5 and len(ps._pull_cache) == 5
+    assert ps.meter.per_machine.shape == (5,)
+    assert ps._keys_sent.shape == (5, 5) and not ps._keys_sent.any()
+    assert rep["reshard_bytes"] > 0
+    ps.run(2)
+    # shrink 5 → 2
+    pu2 = pu5 % 2
+    pv2 = pv5 % 2
+    rep = ps.apply_placement(pu2, pv2, k=2)
+    assert ps.k == 2 and len(ps.batches) == 2 and len(ps._pull_cache) == 2
+    assert ps.meter.per_machine.shape == (2,)
+    assert rep["reshard_bytes"] > 0
+    ps.run(2)                              # training continues post-shrink
+    with pytest.raises(ValueError, match="labels reach"):
+        ps.apply_placement(pu5, pv2, k=2)
+
+
+def test_sync_cluster_pushes_elastic_placement():
+    from repro.ml.dbpg import DBPGConfig
+    from repro.ml.ps import PSCluster
+
+    sess = _fed_session(n=2)
+    g = sess.stream.arena.graph()
+    labels = np.zeros(g.num_u, np.float32)
+    ps = PSCluster(g, labels, sess.parts.copy(),
+                   np.full(g.num_v, -1, np.int32), sess.k, DBPGConfig())
+    sess.grow_k(force=True)
+    rep = sess.sync_cluster(ps)
+    assert ps.k == sess.k
+    assert np.array_equal(ps.parts_u, sess.parts)
+    assert rep["moved_rows"] > 0
+
+
+# ------------------------------------------------- stream k-change hook
+def test_apply_partition_state_validates_shapes():
+    sess = _fed_session(n=1)
+    W_cap = sess.stream.arena.W_cap
+    n = sess.parts.shape[0]
+    with pytest.raises(ValueError, match="capacity-stable"):
+        sess.stream.apply_partition_state(
+            np.zeros(n, np.int32), np.zeros((5, W_cap + 1), np.int32), k=5)
+    with pytest.raises(ValueError, match="U rows"):
+        sess.stream.apply_partition_state(
+            np.zeros(n + 3, np.int32), np.zeros((4, W_cap), np.int32))
+
+
+def test_feed_after_k_change_keeps_streaming():
+    sess = _fed_session(n=2)
+    sess.grow_k(force=True)
+    k_new = sess.k
+    upd = sess.feed(_chunks(1, seed=9)[0])
+    assert upd.metrics.k == k_new
+    assert upd.dispatches.get("stream_feed_scan") == 1
+    g = sess.stream.arena.graph()
+    want = evaluate(g, sess.parts, None, sess.k)
+    # frac>0 seeding makes popcounts an upper bound; exact when untripped
+    got = sess.stream._popcount_metrics()
+    assert got.traffic_sum >= want.traffic_sum
+
+
+# ------------------------------------- satellite: need-pack int32 ceiling
+def test_need_masks_int32_key_ceiling():
+    import jax
+
+    from repro.core.jax_refine import need_masks
+
+    if jax.config.jax_enable_x64:
+        pytest.skip("x64 enabled: the ceiling does not apply")
+    # tiny edge list, huge declared num_v: k * num_v straddles 2^31
+    num_v_ok = 2**31 // 4          # k*num_v == 2^31 exactly: max key fits
+    num_v_bad = 2**31 // 4 + 1
+    indptr = np.array([0, 1], np.int64)
+    indices = np.array([0], np.int32)
+    g_ok = BipartiteGraph(1, num_v_ok, indptr, indices)
+    masks = need_masks(g_ok, np.zeros(1, np.int32), 4)
+    assert masks.shape == (4, (num_v_ok + 31) // 32)
+    g_bad = BipartiteGraph(1, num_v_bad, indptr, indices)
+    with pytest.raises(ValueError, match="int32"):
+        need_masks(g_bad, np.zeros(1, np.int32), 4)
+
+
+# --------------------------------------- satellite: drift cold window
+def test_drift_tracker_cold_window_lazy_seed():
+    from repro.core.costs import PartitionMetrics
+
+    def metrics(max_foot, k=4):
+        foot = np.full(k, 50, np.int64)    # growth concentrates on machine 0
+        foot[0] = max_foot
+        return PartitionMetrics(k, np.ones(k, np.int64), foot, foot.copy(),
+                                foot.copy(), np.zeros(k, np.int64))
+
+    # a zero-seeded window mean would make the very first update trip at
+    # any threshold; the lazy seed must keep the first feeds quiet
+    t = DriftTracker(window=8, threshold=1.0, min_feeds=1)
+    d0 = t.update(metrics(100))
+    assert not d0.repartition and d0.baseline == pytest.approx(d0.drift)
+    d1 = t.update(metrics(100))            # steady ratio: still no trip
+    assert not d1.repartition
+    # partially-filled window averages the 2 real entries, never the 6
+    # unobserved slots
+    assert d1.baseline == pytest.approx(d0.drift)
+    d2 = t.update(metrics(300))            # genuine degradation trips
+    assert d2.repartition
+    # after reset the window re-seeds lazily again (no stale entries)
+    d3 = t.update(metrics(300))
+    assert not d3.repartition and d3.baseline == pytest.approx(d3.drift)
+
+
+def test_migration_bytes_accumulates_separately():
+    a = TrafficCounters(pushed_bytes=8, migration_bytes=100)
+    b = TrafficCounters(pulled_bytes=4, migration_bytes=50)
+    s = a + b
+    assert s.migration_bytes == 150
+    assert (s.pushed_bytes, s.pulled_bytes) == (8, 4)

@@ -95,6 +95,59 @@ def test_straggler_accumulator():
     np.testing.assert_allclose(np.asarray(out["g"]), (3 * 1.0 + 0.5) / 4)
 
 
+def test_straggler_accumulator_tau_bounded_equals_synchronous_sum():
+    """Property: with stale_decay=1.0 (pure bounded-delay, no damping),
+    quorum-stepping with stale folds applies EXACTLY the synchronous
+    gradient sum whenever every shard's gradient arrives within τ — no
+    gradient is dropped, double-counted, or rescaled by the fold path."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        num_shards=st.integers(2, 5),
+        steps=st.integers(1, 4),
+        tau=st.integers(0, 2),
+        data=st.data(),
+    )
+    @settings(max_examples=40, deadline=None)
+    def run(num_shards, steps, tau, data):
+        cfg = StragglerConfig(num_shards=num_shards, quorum=1.0 / num_shards,
+                              max_delay=tau, stale_decay=1.0)
+        acc = BoundedDelayAccumulator(cfg, {"g": jnp.zeros(2)})
+        grads = np.asarray(data.draw(st.lists(
+            st.lists(st.lists(
+                st.floats(-8, 8, allow_nan=False, width=32),
+                min_size=2, max_size=2),
+                min_size=num_shards, max_size=num_shards),
+            min_size=steps, max_size=steps)), np.float32)
+        delays = np.asarray(data.draw(st.lists(
+            st.lists(st.integers(0, tau),
+                     min_size=num_shards, max_size=num_shards),
+            min_size=steps, max_size=steps)))
+        applied = np.zeros(2, np.float64)
+        un_taken = 0    # submissions not yet folded into an applied step
+        for t in range(steps + tau + 1):
+            for step in range(steps):
+                for s in range(num_shards):
+                    if step + delays[step][s] == t:
+                        acc.submit(s, {"g": jnp.asarray(grads[step][s])},
+                                   arrived_step=step)
+                        un_taken += 1
+            if un_taken and acc.ready(un_taken):
+                applied += np.asarray(
+                    acc.take(arrived=un_taken)["g"], np.float64) * un_taken
+                un_taken = 0
+        if un_taken:    # τ-guard deferred the last fold: hard-sync drain
+            applied += np.asarray(
+                acc.take(arrived=un_taken)["g"], np.float64) * un_taken
+        np.testing.assert_allclose(
+            applied, grads.astype(np.float64).sum(axis=(0, 1)),
+            rtol=1e-5, atol=1e-4)
+
+    run()
+
+
 def test_data_pipeline_deterministic():
     d1 = SyntheticLMData(1000, 4, 32, seed=9)
     d2 = SyntheticLMData(1000, 4, 32, seed=9)

@@ -316,11 +316,14 @@ def test_drift_triggered_repartition_and_migration_metering():
     assert reparted, "drift threshold 1.0 should have tripped"
     mig = reparted[0].migration
     assert mig is not None
-    assert mig.traffic.pushed_bytes > 0
+    assert mig.traffic.migration_bytes > 0
+    assert mig.traffic.migration_bytes == mig.acquired_bytes + mig.retired_bytes
+    # recovery traffic never pollutes the steady-state push/pull counters
+    assert mig.traffic.pushed_bytes == 0 and mig.traffic.pulled_bytes == 0
     assert 0 <= mig.moved_u <= sess.parts.shape[0]
     assert np.array_equal(np.sort(mig.assign), np.arange(4))
     # session accumulates migration traffic in TrafficCounters units
-    assert sess.traffic.pushed_bytes >= mig.traffic.pushed_bytes
+    assert sess.traffic.migration_bytes >= mig.traffic.migration_bytes
     # cold repartition keeps the need invariant: popcounts stay exact
     g = sess.arena.graph()
     want = evaluate(g, sess.parts, None, 4)
@@ -362,7 +365,8 @@ def test_migration_relabel_maximizes_overlap():
     assert np.array_equal(plan.parts_u, old_parts)
     assert np.array_equal(plan.s_masks, old)
     assert plan.moved_u == 0
-    assert plan.traffic.pushed_bytes == 0 and plan.traffic.pulled_bytes == 0
+    assert plan.traffic.migration_bytes == 0
+    assert plan.acquired_bytes == 0 and plan.retired_bytes == 0
     M = packed_intersect_counts(new, old)
     assert plan.kept_overlap == int(M.max(axis=1).sum())
 
@@ -370,7 +374,13 @@ def test_migration_relabel_maximizes_overlap():
 def test_traffic_counters_add():
     a = TrafficCounters(1, 2, 3, 4)
     b = TrafficCounters(10, 20, 30, 40)
+    # positional construction stays backward compatible: migration_bytes
+    # defaults to 0 and sums component-wise like the original four fields
     assert a + b == TrafficCounters(11, 22, 33, 44)
+    assert (a + b).migration_bytes == 0
+    c = TrafficCounters(migration_bytes=7)
+    assert (a + c).migration_bytes == 7
+    assert (a + c).pushed_bytes == 1
 
 
 # ------------------------------------------------------- PSCluster updates
