@@ -119,6 +119,49 @@ def emit_chaos_bench(rows: list[dict],
     return path
 
 
+def emit_system_bench(rows: list[dict], meta: dict | None = None,
+                      quick: bool = False) -> pathlib.Path:
+    """Write the serving-system benchmark grid to the repo-root
+    ``BENCH_system.json`` trajectory.
+
+    Schema (append-only; the driver tracks these keys across PRs):
+
+    * ``benchmark``: always ``"parsa_system"``.
+    * ``rows`` — one row per (placement, mode) cell of the
+      {random, parsa} x {sync, async} serving grid, each carrying:
+      ``placement`` ("random"/"parsa"), ``mode`` ("sync"/"async"),
+      ``requests``, ``examples``, ``tokens``, ``wall_s``,
+      ``examples_s``, ``tokens_s``, ``p50_ms``, ``p99_ms``,
+      ``mean_ms``, ``wire_s`` (modeled transfer seconds),
+      ``blocked_s`` (wall time actually spent blocked on pulls),
+      ``compute_s``, ``hidden_s`` (wire hidden behind compute — the
+      measured overlap), ``hidden_frac``, ``pull_inter_bytes``,
+      ``push_inter_bytes``, ``stale_entries``, ``fresh_entries``.
+    * ``meta`` — the run configuration (graph, k, bandwidth, request
+      counts) plus the derived headline ratios:
+      ``speedup_parsa_async_vs_random_sync`` (the end-to-end claim),
+      ``async_speedup_parsa`` / ``async_speedup_random`` (overlap win
+      at equal placement), ``traffic_cut_pct`` (pull inter-machine
+      bytes, parsa vs random).
+
+    ``quick=True`` (CI-scale run) lands under ``rows_quick`` /
+    ``meta_quick`` instead, so a smoke run never clobbers the
+    acceptance numbers.  Either write preserves the other section's
+    keys — re-runs replace rather than duplicate their own section.
+    """
+    path = ROOT / "BENCH_system.json"
+    if path.exists():
+        payload = json.loads(path.read_text())
+    else:
+        payload = {"benchmark": "parsa_system"}
+    suffix = "_quick" if quick else ""
+    payload[f"rows{suffix}"] = rows
+    payload[f"meta{suffix}"] = meta or {}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path} (+{len(rows)} system rows{suffix or ''})")
+    return path
+
+
 def pipeline_phase_rows(res, backend: str, refine_backend: str) -> list[dict]:
     """Flatten one PartitionResult's timings into BENCH_pipeline rows."""
     return [

@@ -18,7 +18,7 @@ def main() -> None:
     from . import (bench_chaos, bench_embedding_traffic, bench_fig7_vary_k,
                    bench_fig8_subgraphs, bench_fig9_global_init,
                    bench_fig10_scalability, bench_kernels, bench_stream,
-                   bench_table2, bench_table34_dbpg)
+                   bench_system, bench_table2, bench_table34_dbpg)
 
     suites = {
         "table2": lambda: bench_table2.run(scale=scale),
@@ -31,6 +31,7 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(scale=scale),
         "stream": lambda: bench_stream.run(scale=scale),
         "chaos": lambda: bench_chaos.run(scale=scale),
+        "system": lambda: bench_system.run(scale=scale),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

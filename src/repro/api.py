@@ -72,6 +72,12 @@ __all__ = [
     "ElasticPolicy",
     "ElasticSession",
     "ThresholdPolicy",
+    # serving surface (lazy — see __getattr__)
+    "PSRequestSource",
+    "RequestMix",
+    "ServingConfig",
+    "ServingEngine",
+    "ZipfWorkload",
 ]
 
 # Streaming lives in ``repro.stream`` (online incremental Parsa over
@@ -88,6 +94,11 @@ _STREAM_EXPORTS = ("ParsaStreamConfig", "StreamSession", "StreamUpdate",
 _ELASTIC_EXPORTS = ("ChaosEvent", "ChaosSchedule", "ElasticConfig",
                     "ElasticPolicy", "ElasticSession", "ThresholdPolicy")
 
+# The request-driven serving engine (``repro.serving``: async pull/compute
+# overlap over PSCluster shards) — same lazy surfacing.
+_SERVING_EXPORTS = ("PSRequestSource", "RequestMix", "ServingConfig",
+                    "ServingEngine", "ZipfWorkload")
+
 
 def __getattr__(name: str):
     if name in _STREAM_EXPORTS:
@@ -98,6 +109,10 @@ def __getattr__(name: str):
         from . import elastic
 
         return getattr(elastic, name)
+    if name in _SERVING_EXPORTS:
+        from . import serving
+
+        return getattr(serving, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 _SELECTS = ("size", "footprint")

@@ -4,6 +4,13 @@ Covers every family: dense/moe/vlm prefill the cache in one pass; recurrent
 families (xlstm/hybrid) warm state by stepping the prompt token-by-token
 (their prefill-parallel path does not thread final states out — DESIGN §7).
 
+Decoding runs through the ``repro.serving`` engine (one serving code path
+for LM decode and PS request traffic): each token step is one engine
+request, prompt tokens are staged ahead as ``ReadyHandle`` payloads, and
+the engine's latency recorder supplies the tokens/s accounting.
+``decode_loop`` is the pre-engine reference loop, kept as the parity
+oracle (tests assert bit-identical tokens).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduce \
       --batch 4 --prompt-len 16 --gen 16
 """
@@ -18,16 +25,24 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import transformer as TR
+from ..serving import ReadyHandle, Request, ServingEngine
 from .steps import make_serve_step
 
 
-def decode_loop(model, serve_step, params, prompt, gen: int, cache_seq: int):
+def _init_cache(model, B: int, cache_seq: int):
     cfg = model.cfg
-    B, S = prompt.shape
     cache = model.init_cache(B, cache_seq)
     if cfg.family == "encdec":
-        kv = TR.init_kv_caches(cfg, B, cfg.encoder_seq, dtype=jnp.dtype(cfg.dtype))
+        kv = TR.init_kv_caches(cfg, B, cfg.encoder_seq,
+                               dtype=jnp.dtype(cfg.dtype))
         cache["cross"] = (kv["k"], kv["v"])
+    return cache
+
+
+def decode_loop(model, serve_step, params, prompt, gen: int, cache_seq: int):
+    """Pre-engine reference decode (parity oracle for the engine route)."""
+    B, S = prompt.shape
+    cache = _init_cache(model, B, cache_seq)
     out_tokens = []
     # warm the cache on the prompt
     tok = prompt[:, :1]
@@ -42,6 +57,71 @@ def decode_loop(model, serve_step, params, prompt, gen: int, cache_seq: int):
         tok = nxt[:, None]
         out_tokens.append(np.asarray(tok))
     return np.concatenate(out_tokens, axis=1)
+
+
+class DecodeSource:
+    """Greedy decode as an engine request source: one request per token
+    step.  Prompt tokens are known ahead, so their host→device staging
+    prefetches behind the current step; generated tokens depend on the
+    previous commit, so their payload is read at compute time (the engine
+    commits step t before computing t+1 in both modes)."""
+
+    def __init__(self, model, serve_step, params, prompt, gen: int,
+                 cache_seq: int):
+        B, S = prompt.shape
+        self.serve_step = serve_step
+        self.params = params
+        self.prompt = prompt
+        self.gen = gen
+        self.warm_steps = S - 1
+        self.num_steps = S - 1 + gen
+        self.batch = B
+        self.cache = _init_cache(model, B, cache_seq)
+        self.tok = prompt[:, -1:]
+        self.out_tokens: list[np.ndarray] = []
+        self._pos = 0
+
+    def on_step(self, t: int) -> None:
+        pass
+
+    def next_request(self, t: int) -> Request:
+        phase = "prefill" if t < self.warm_steps else "decode"
+        return Request(tenant=phase, home=0, rows=None, batch=None,
+                       need=None, examples=self.batch, tokens=self.batch)
+
+    def issue(self, req: Request, t: int) -> ReadyHandle:
+        if t < self.warm_steps:
+            # prompt token known ahead: stage the device transfer now
+            return ReadyHandle(jnp.asarray(self.prompt[:, t:t + 1]))
+        return ReadyHandle(None)   # generated token: read at compute time
+
+    def compute(self, req: Request, payload):
+        tok = payload if payload is not None else self.tok
+        return self.serve_step(
+            self.params,
+            {"token": tok, "pos": jnp.asarray(self._pos, jnp.int32),
+             "cache": self.cache})
+
+    def commit(self, req: Request, out, t: int) -> dict:
+        nxt, _, cache = out
+        self.cache = cache
+        if t >= self.warm_steps:
+            self.tok = nxt[:, None]
+            self.out_tokens.append(np.asarray(self.tok))
+        self._pos += 1
+        return {}
+
+    def run(self, prefetch: bool = True) -> tuple[np.ndarray, dict]:
+        engine = ServingEngine(self, prefetch=prefetch, warmup=0)
+        summary = engine.run(self.num_steps)
+        return np.concatenate(self.out_tokens, axis=1), summary
+
+
+def decode_loop_engine(model, serve_step, params, prompt, gen: int,
+                       cache_seq: int, prefetch: bool = True):
+    """Engine-routed decode; bit-identical tokens to ``decode_loop``."""
+    src = DecodeSource(model, serve_step, params, prompt, gen, cache_seq)
+    return src.run(prefetch=prefetch)
 
 
 def main(argv=None):
@@ -64,11 +144,14 @@ def main(argv=None):
         rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
         jnp.int32)
     t0 = time.time()
-    out = decode_loop(model, serve_step, params, prompt, args.gen,
-                      cache_seq=args.prompt_len + args.gen)
+    out, summary = decode_loop_engine(model, serve_step, params, prompt,
+                                      args.gen,
+                                      cache_seq=args.prompt_len + args.gen)
     dt = time.time() - t0
     print(f"arch={cfg.name} generated {out.shape} in {dt:.1f}s "
-          f"({args.batch * args.gen / max(dt, 1e-9):.1f} tok/s)")
+          f"({args.batch * args.gen / max(dt, 1e-9):.1f} tok/s, engine "
+          f"p50 {summary['p50_ms']:.1f}ms p99 {summary['p99_ms']:.1f}ms "
+          f"per token step)")
     print("sample:", out[0][:16])
     assert np.all(out >= 0) and np.all(out < cfg.vocab_size)
     return out

@@ -20,6 +20,7 @@ from ..configs import get_config
 from ..data import SyntheticLMData
 from ..optim import AdamWConfig
 from ..runtime import FaultConfig, TrainLoop
+from ..serving import prefetch_batches
 from .steps import make_train_step
 
 
@@ -62,17 +63,24 @@ def main(argv=None):
 
     data = SyntheticLMData(cfg.vocab_size, args.batch, args.seq, seed=0)
 
-    def batches():
+    def host_batches():
         for t in range(start, args.steps):
             b = data.batch_at(t)
-            b = {k: jax.numpy.asarray(v) for k, v in b.items()}
             if cfg.family == "encdec":
-                b["frames"] = jax.numpy.zeros(
-                    (args.batch, cfg.encoder_seq, cfg.d_model), jax.numpy.float32)
+                b["frames"] = np.zeros(
+                    (args.batch, cfg.encoder_seq, cfg.d_model), np.float32)
             if cfg.family == "vlm":
-                b["patches"] = jax.numpy.zeros(
-                    (args.batch, cfg.num_patches, cfg.d_model), jax.numpy.float32)
+                b["patches"] = np.zeros(
+                    (args.batch, cfg.num_patches, cfg.d_model), np.float32)
             yield b
+
+    def stage(b):
+        return {k: jax.numpy.asarray(v) for k, v in b.items()}
+
+    def batches():
+        # double-buffered staging (repro.serving): batch t+1's host→device
+        # transfer is in flight while the loop computes step t
+        yield from prefetch_batches(host_batches(), stage, depth=2)
 
     fault = FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                         fail_at_step=args.fail_at)

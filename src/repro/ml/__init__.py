@@ -1,3 +1,3 @@
 from .lr import SparseBatch, lr_objective, lr_grad, make_problem  # noqa: F401
 from .dbpg import DBPGConfig, soft_threshold, kkt_filter  # noqa: F401
-from .ps import PSCluster, TrafficMeter  # noqa: F401
+from .ps import PSCluster, PullHandle, PullPlan, TrafficMeter  # noqa: F401

@@ -23,6 +23,7 @@ with compute overlapping none of the communication (conservative).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,7 @@ from ..core.costs import need_matrix
 from .dbpg import DBPGConfig, kkt_filter, prox_step, quantize_int8, dequantize_int8
 from .lr import SparseBatch, lr_grad, lr_objective
 
-__all__ = ["TrafficMeter", "PSCluster"]
+__all__ = ["TrafficMeter", "PSCluster", "PullPlan", "PullHandle"]
 
 
 @dataclasses.dataclass
@@ -42,17 +43,82 @@ class TrafficMeter:
     inter_bytes: int = 0
     per_machine: np.ndarray | None = None
 
+    def _ensure(self, size: int) -> None:
+        # per_machine sizes itself lazily so a bare TrafficMeter() works;
+        # PSCluster still pre-sizes it from k at construction
+        if self.per_machine is None:
+            self.per_machine = np.zeros(size, dtype=np.int64)
+        elif self.per_machine.shape[0] < size:
+            self.per_machine = np.concatenate(
+                [self.per_machine,
+                 np.zeros(size - self.per_machine.shape[0], np.int64)])
+
     def add(self, src: int, dst: int, nbytes: int):
         if src == dst:
             self.inner_bytes += nbytes
         else:
             self.inter_bytes += nbytes
+            self._ensure(max(src, dst) + 1)
             self.per_machine[src] += nbytes
             self.per_machine[dst] += nbytes
 
     @property
     def total(self) -> int:
         return self.inner_bytes + self.inter_bytes
+
+
+@dataclasses.dataclass
+class PullPlan:
+    """What a worker's next pull would fetch, before committing to it.
+
+    ``delta`` marks the working-set entries whose server value differs from
+    the worker's stale buffer (value-delta caching — the same quantity
+    ``step()`` meters); ``src_bytes[j]`` is the 4 B/value payload owed by
+    server machine ``j``.  Planning is separated from ``pull_nowait`` so the
+    serving engine can price each source link (bandwidth × straggle, retry
+    timeouts) and exclude dead shards *before* any bytes are metered."""
+
+    worker: int
+    need: np.ndarray          # (V,) bool — the request's working set
+    delta: np.ndarray         # (V,) bool — entries that must be fetched
+    src_bytes: np.ndarray     # (k,) int64 — bytes per source machine
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self.src_bytes.sum())
+
+
+@dataclasses.dataclass
+class PullHandle:
+    """Device future for a non-blocking pull.
+
+    The host→device transfer of the worker's refreshed buffer is dispatched
+    at issue time; ``block()`` waits out the *remaining* modeled wire time
+    (``wire_s`` + retry penalties ``wait_s``, clocked from ``issued_at``)
+    and then ``jax.block_until_ready`` on the buffer — so any compute the
+    caller dispatched in between genuinely overlaps the transfer, and the
+    overlap is measured rather than assumed."""
+
+    worker: int
+    issued_at: float          # perf_counter at issue
+    wire_s: float             # modeled transfer time (max over live links)
+    wait_s: float             # retry/timeout penalty spent on failed links
+    inner_bytes: int
+    inter_bytes: int
+    fresh_entries: int        # entries actually refreshed
+    stale_entries: int        # entries left stale (excluded/dead sources)
+    buffer: jax.Array         # (V,) f32 device view of the worker's cache
+
+    @property
+    def done_at(self) -> float:
+        return self.issued_at + self.wire_s + self.wait_s
+
+    def block(self) -> jax.Array:
+        remaining = self.done_at - time.perf_counter()
+        if remaining > 0:
+            time.sleep(remaining)
+        jax.block_until_ready(self.buffer)
+        return self.buffer
 
 
 class PSCluster:
@@ -87,15 +153,14 @@ class PSCluster:
         self.owner = self.parts_v.copy()
         rr = np.flatnonzero(self.owner < 0)
         self.owner[rr] = rr % k  # isolated rows: arbitrary owners
-        self.batches = []
-        self.rows = []
-        for i in range(k):
-            rows = np.flatnonzero(self.parts_u == i)
-            self.rows.append(rows)
-            self.batches.append(SparseBatch.from_graph(graph, rows, labels))
-        self.full_batch = SparseBatch.from_graph(
-            graph, np.arange(graph.num_u), labels
-        )
+        self._labels = np.asarray(labels, np.float32)
+        self.rows = [np.flatnonzero(self.parts_u == i) for i in range(k)]
+        # per-machine batches and the concatenated oracle batch are built on
+        # first use — serving-scale clusters (50k+ rows) only ever touch a
+        # small working set per request and never pay the full conversion
+        self._batches: list[SparseBatch] | None = None
+        self._full_batch: SparseBatch | None = None
+        self.placement_version = 0  # bumped by apply_placement (router sync)
         self.w = jnp.zeros(graph.num_v, jnp.float32)
         self._grad = jax.jit(lr_grad)
         self._obj = jax.jit(lr_objective, static_argnames=("lam",))
@@ -107,6 +172,22 @@ class PSCluster:
         self._ef = [np.zeros(graph.num_v, np.float32) for _ in range(k)]
         self._hist: list[np.ndarray] = []
         self.rng = np.random.default_rng(seed)
+
+    @property
+    def batches(self) -> list[SparseBatch]:
+        if self._batches is None:
+            self._batches = [
+                SparseBatch.from_graph(self.graph, rows, self._labels)
+                for rows in self.rows
+            ]
+        return self._batches
+
+    @property
+    def full_batch(self) -> SparseBatch:
+        if self._full_batch is None:
+            self._full_batch = SparseBatch.from_graph(
+                self.graph, np.arange(self.graph.num_u), self._labels)
+        return self._full_batch
 
     # ------------------------------------------------------------------
     def apply_placement(self, parts_u: np.ndarray, parts_v: np.ndarray,
@@ -203,13 +284,10 @@ class PSCluster:
         self.parts_v = parts_v.copy()
         self.owner = new_owner
         self.need = need_matrix(self.graph, self.parts_u, self.k)
-        labels = np.asarray(self.full_batch.labels)
-        self.rows, self.batches = [], []
-        for i in range(self.k):
-            rows = np.flatnonzero(self.parts_u == i)
-            self.rows.append(rows)
-            self.batches.append(
-                SparseBatch.from_graph(self.graph, rows, labels))
+        self.rows = [np.flatnonzero(self.parts_u == i)
+                     for i in range(self.k)]
+        self._batches = None  # rebuilt lazily for the new row shards
+        self.placement_version += 1
         # error-feedback residuals are supported on the OLD working sets;
         # under the new need masks the stranded coordinates could neither
         # be sent nor dropped — start the accumulators clean instead
@@ -229,6 +307,92 @@ class PSCluster:
         d = int(self.rng.integers(0, tau + 1))
         d = min(d, len(self._hist))
         return self._hist[-d] if d > 0 else np.asarray(self.w)
+
+    # ------------------------------------------------------------------
+    # non-blocking pull API (repro.serving): plan → issue → overlap → block.
+    # Byte accounting is identical to step()'s pull/push metering — value-
+    # delta caching on pull, key caching + optional int8 compression on
+    # push — but split into separate calls so a serving engine can overlap
+    # the modeled wire time with device compute.
+
+    def plan_pull(self, worker: int,
+                  need: np.ndarray | None = None) -> PullPlan:
+        """Price worker's next pull without transferring anything.
+
+        ``need`` restricts the working set (a request touching few rows
+        needs few weights); defaults to the worker's full §2.3 need mask."""
+        need = self.need[worker] if need is None else np.asarray(need, bool)
+        w_host = np.asarray(self.w)
+        delta = need & (w_host != self._pull_cache[worker])
+        src_bytes = np.bincount(self.owner[delta], minlength=self.k) * 4
+        return PullPlan(worker=worker, need=need, delta=delta,
+                        src_bytes=src_bytes.astype(np.int64))
+
+    def pull_nowait(self, plan: PullPlan, exclude: frozenset = frozenset(),
+                    wire_s: float = 0.0, wait_s: float = 0.0) -> PullHandle:
+        """Issue the planned pull; returns a device future immediately.
+
+        ``exclude`` lists source machines that failed their retry budget
+        (dead or timed-out shards): their entries stay stale in the
+        worker's buffer — the §4.3 bounded-staleness fallback — and cost
+        no bytes.  ``wire_s``/``wait_s`` are the modeled transfer time and
+        retry penalty (priced by the caller's bandwidth model); the
+        returned handle's ``block()`` makes them real wall-clock."""
+        worker = plan.worker
+        w_host = np.asarray(self.w)
+        fetch = plan.delta.copy()
+        stale_entries = 0
+        for j in exclude:
+            if j == worker:
+                continue  # local slice never travels; cannot go stale
+            from_j = plan.delta & (self.owner == j)
+            stale_entries += int(from_j.sum())
+            fetch &= ~from_j
+        inner = inter = 0
+        per_src = np.bincount(self.owner[fetch], minlength=self.k)
+        for j in np.flatnonzero(per_src):
+            cnt = int(per_src[j])
+            self.meter.add(int(j), worker, cnt * 4)
+            if j == worker:
+                inner += cnt * 4
+            else:
+                inter += cnt * 4
+        cache = self._pull_cache[worker]
+        cache[fetch] = w_host[fetch]
+        # snapshot before the device transfer: later cache mutations (the
+        # next pull) must not alias into a buffer still being computed on
+        buffer = jnp.asarray(cache.copy())
+        return PullHandle(
+            worker=worker, issued_at=time.perf_counter(),
+            wire_s=float(wire_s), wait_s=float(wait_s),
+            inner_bytes=inner, inter_bytes=inter,
+            fresh_entries=int(fetch.sum()), stale_entries=stale_entries,
+            buffer=buffer)
+
+    def meter_push(self, worker: int, mask: np.ndarray) -> dict:
+        """Meter worker's push of gradient entries ``mask`` to the owning
+        servers (step()'s push accounting: per-entry values plus a 4 B key
+        the first time a (worker, server) pair ships that link)."""
+        mask = np.asarray(mask, bool)
+        val_bytes = 1 if self.cfg.compress else 4
+        inner = inter = 0
+        per_server = np.bincount(self.owner[mask], minlength=self.k)
+        for j in np.flatnonzero(per_server):
+            cnt = int(per_server[j])
+            nbytes = cnt * val_bytes
+            if not self._keys_sent[worker, j]:
+                nbytes += cnt * 4
+                self._keys_sent[worker, j] = True
+            self.meter.add(worker, int(j), nbytes)
+            if j == worker:
+                inner += nbytes
+            else:
+                inter += nbytes
+        return {"inner_bytes": inner, "inter_bytes": inter}
+
+    def commit_weights(self, new_w) -> None:
+        """Server-side commit of the proximal update (serving push path)."""
+        self.w = jnp.asarray(new_w)
 
     def step(self, t: int) -> dict:
         k, cfg = self.k, self.cfg

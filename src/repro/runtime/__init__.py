@@ -1,4 +1,4 @@
-from .fault import TrainLoop, FaultConfig  # noqa: F401
+from .fault import TrainLoop, FaultConfig, RetryPolicy  # noqa: F401
 from .straggler import (  # noqa: F401
     BoundedDelayAccumulator,
     StragglerConfig,

@@ -11,7 +11,12 @@ framework side of that contract, testable on one host:
     logical checkpoint onto a *different* mesh (data-parallel width change),
     because checkpoints store logical arrays, not device layouts;
   * straggler mitigation lives in runtime/straggler.py (bounded-delay
-    gradient semantics, the paper's τ model applied to training).
+    gradient semantics, the paper's τ model applied to training);
+  * ``RetryPolicy`` — per-link retry/timeout admission used by the
+    serving pull path (repro.serving): a source shard that cannot
+    deliver within its (backed-off) deadlines is dropped for the step
+    and the worker falls back to its stale buffer (§4.3 bounded
+    staleness) instead of stalling the request.
 """
 from __future__ import annotations
 
@@ -34,6 +39,47 @@ class FaultConfig:
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Deadline/retry admission for one pull link.
+
+    ``admit(wire_s)`` plays the attempts out against the modeled transfer
+    time: each attempt has a deadline (``timeout_s`` growing by
+    ``backoff``); an attempt whose transfer fits the deadline delivers and
+    the call returns ``(True, wait_s)`` where ``wait_s`` is the time burnt
+    on *earlier failed* attempts (the caller adds ``wire_s`` itself).  A
+    link that never fits — a killed shard models ``wire_s = inf`` —
+    returns ``(False, wait_s)`` with the full timeout budget spent, and
+    the caller serves from the stale buffer instead of stalling."""
+
+    timeout_s: float = 0.05
+    retries: int = 1
+    backoff: float = 2.0
+
+    def __post_init__(self):
+        if self.timeout_s <= 0:
+            raise ValueError(f"timeout_s must be > 0, got {self.timeout_s}")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.backoff < 1.0:
+            raise ValueError(f"backoff must be >= 1, got {self.backoff}")
+
+    @property
+    def budget_s(self) -> float:
+        """Total time a fully failing link costs (sum of all deadlines)."""
+        return sum(self.timeout_s * self.backoff ** a
+                   for a in range(self.retries + 1))
+
+    def admit(self, wire_s: float) -> tuple[bool, float]:
+        deadline, wait = self.timeout_s, 0.0
+        for _ in range(self.retries + 1):
+            if wire_s <= deadline:
+                return True, wait
+            wait += deadline
+            deadline *= self.backoff
+        return False, wait
 
 
 class TrainLoop:

@@ -1,0 +1,36 @@
+"""repro.serving — heavy-traffic PS serving with async pull/compute
+overlap (ROADMAP item 1: the paper's traffic cut, measured as a
+wall-clock speedup)."""
+from .engine import (  # noqa: F401
+    PSRequestSource,
+    Request,
+    RequestMix,
+    ServingConfig,
+    ServingEngine,
+    ZipfWorkload,
+)
+from .latency import (  # noqa: F401
+    BandwidthModel,
+    LatencyRecorder,
+    LinkClock,
+    RequestRecord,
+)
+from .prefetch import OverlapMeter, ReadyHandle, prefetch_batches  # noqa: F401
+from .router import Router  # noqa: F401
+
+__all__ = [
+    "BandwidthModel",
+    "LatencyRecorder",
+    "LinkClock",
+    "OverlapMeter",
+    "PSRequestSource",
+    "ReadyHandle",
+    "Request",
+    "RequestMix",
+    "RequestRecord",
+    "Router",
+    "ServingConfig",
+    "ServingEngine",
+    "ZipfWorkload",
+    "prefetch_batches",
+]

@@ -1,0 +1,356 @@
+"""Request-driven PS serving engine (ROADMAP item 1: close the paper's
+end-to-end loop).
+
+The engine drives k ``PSCluster`` shards through batched
+pull → compute → push steps for a multi-tenant request mix.  One request
+is one batched step on its *home* worker:
+
+  pull    — the request's working set (the features its example rows
+            touch), value-delta cached, priced per source link by the
+            ``BandwidthModel`` and issued as a non-blocking
+            ``PullHandle`` (the device future from ``ml/ps.py``);
+  compute — ONE jitted dispatch: margins/loss, smooth gradient, and the
+            masked proximal update on the worker's (≤ τ stale) weight
+            view — the DBPG step, served;
+  push    — gradient entries metered to their owning servers (key
+            caching, compression — ``PSCluster.meter_push``), then the
+            update commits.
+
+In async mode (``prefetch=True``) the engine issues request t+1's pull
+*before* blocking on request t's — double buffering, so the next
+transfer ticks behind the current compute.  The buffered view is then
+one commit stale: τ = 1, the §4.3 bounded-delay model.  Overlap is
+measured, never assumed: ``PullHandle.block()`` sleeps out only the
+transfer time still outstanding and ``jax.block_until_ready`` fences the
+compute, so ``blocked_s`` vs ``wire_s`` is wall-clock evidence.
+
+Fault handling composes the existing layers: a ``ChaosSchedule`` kills /
+straggles shards mid-serve; a source link that cannot deliver within its
+``RetryPolicy`` deadlines is dropped for the step and the worker serves
+from its stale buffer (bounded-staleness fallback) — after the first
+timeout the link is *suspected* and skipped at zero cost until it
+recovers.  With an ``ElasticSession`` attached, kills instead trigger a
+warm repair whose new placement reaches the router through
+``PSCluster.placement_version``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.jax_partition import _count_dispatch
+from ..ml.dbpg import soft_threshold
+from ..ml.lr import SparseBatch, lr_grad, _margins
+from ..ml.ps import PSCluster
+from ..runtime.fault import RetryPolicy
+from .latency import BandwidthModel, LatencyRecorder, LinkClock, RequestRecord
+from .prefetch import OverlapMeter
+from .router import Router
+
+__all__ = ["Request", "ZipfWorkload", "RequestMix", "ServingConfig",
+           "PSRequestSource", "ServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ZipfWorkload:
+    """One tenant: Zipf-skewed batches against its home shard's rows."""
+
+    name: str
+    batch: int = 256
+    zipf_s: float = 1.1
+    hot_offset: int = 0      # rotates the pool: distinct hot set per tenant
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if self.weight <= 0:
+            raise ValueError(f"weight must be > 0, got {self.weight}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMix:
+    """Weighted tenant mix; ``sample`` draws the next request's tenant."""
+
+    workloads: tuple[ZipfWorkload, ...]
+
+    def __post_init__(self):
+        if not self.workloads:
+            raise ValueError("need at least one workload")
+
+    def sample(self, rng: np.random.Generator) -> ZipfWorkload:
+        w = np.array([wl.weight for wl in self.workloads])
+        return self.workloads[int(rng.choice(len(self.workloads),
+                                             p=w / w.sum()))]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    prefetch: bool = True          # async double-buffered pulls
+    bandwidth: float | None = None  # None → the cluster's modeled link
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    update: bool = True            # online DBPG update per request
+    warmup: int = 3                # requests excluded from the stats
+    pad_multiple: int = 2048       # nnz pad bucket (bounds jit variants)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    tenant: str
+    home: int
+    rows: np.ndarray
+    batch: SparseBatch
+    need: np.ndarray          # (V,) bool working set
+    examples: int
+    tokens: int               # nnz processed (text: words)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "lam", "update"))
+def _serve_step(batch: SparseBatch, w: jax.Array, need: jax.Array,
+                lr: float, lam: float, update: bool):
+    """One served DBPG step: loss + smooth gradient + masked prox update.
+
+    The update touches only the request's working set — the server slice
+    semantics of ``PSCluster.step`` restricted to the coordinates this
+    worker may push."""
+    m = _margins(batch, w)
+    loss = jnp.sum(jnp.logaddexp(0.0, -m))
+    g = lr_grad(batch, w)
+    if update:
+        new_w = jnp.where(need, soft_threshold(w - lr * g, lr * lam), w)
+    else:
+        new_w = w
+    return new_w, g, loss
+
+
+class PSRequestSource:
+    """Generates, prices, and commits PS requests for the engine."""
+
+    def __init__(self, cluster: PSCluster, mix: RequestMix,
+                 config: ServingConfig | None = None, chaos=None,
+                 elastic=None):
+        self.cluster = cluster
+        self.mix = mix
+        self.config = config if config is not None else ServingConfig()
+        self.chaos = chaos
+        self.elastic = elastic
+        self.router = Router(cluster)
+        self.bw = BandwidthModel(self.config.bandwidth
+                                 if self.config.bandwidth is not None
+                                 else cluster.bandwidth)
+        self.rng = np.random.default_rng(self.config.seed)
+        self.link = LinkClock(cluster.k)
+        self.straggle = np.ones(cluster.k, np.float64)
+        self.dead: set[int] = set()
+        self.suspect: set[int] = set()   # links past their retry budget
+        self.events: list[tuple[int, str, int]] = []
+
+    # ----------------------------------------------------------- chaos
+    def on_step(self, t: int) -> None:
+        if self.chaos is None:
+            return
+        for ev in self.chaos.at(t):
+            self._apply_event(ev, t)
+
+    def _apply_event(self, ev, t: int) -> None:
+        k = self.cluster.k
+        if ev.kind == "kill":
+            m = ev.machine % k
+            if self.elastic is not None:
+                # warm repair under load: re-place, re-shard the cluster,
+                # and let the router pick it up via placement_version
+                self.elastic.repair(m)
+                self.elastic.sync_cluster(self.cluster)
+                self._sync_fleet()
+                self.dead.discard(m)
+                self.suspect.discard(m)
+            else:
+                self.dead.add(m)
+        elif ev.kind == "add":
+            if self.elastic is not None:
+                self.elastic.grow_k(force=True)
+                self.elastic.sync_cluster(self.cluster)
+                self._sync_fleet()
+        elif ev.kind == "straggle":
+            self.straggle[ev.machine % k] = ev.factor
+        elif ev.kind == "recover":
+            m = ev.machine % k
+            self.straggle[m] = 1.0
+            self.dead.discard(m)
+            self.suspect.discard(m)
+        self.events.append((t, ev.kind, -1 if ev.machine is None
+                            else ev.machine % max(k, 1)))
+
+    def _sync_fleet(self) -> None:
+        k = self.cluster.k
+        if self.straggle.shape[0] < k:
+            self.straggle = np.concatenate(
+                [self.straggle, np.ones(k - self.straggle.shape[0])])
+        else:
+            self.straggle = self.straggle[:k]
+        self.link.resize(k)
+        self.dead = {m for m in self.dead if m < k}
+        self.suspect = {m for m in self.suspect if m < k}
+        self.router.refresh(self.cluster)
+
+    # -------------------------------------------------------- requests
+    def next_request(self, t: int) -> Request:
+        self.router.refresh(self.cluster)
+        wl = self.mix.sample(self.rng)
+        home = self.router.next_home(self.dead)
+        rows = self.router.sample_rows(home, wl.batch, self.rng,
+                                       zipf_s=wl.zipf_s,
+                                       hot_offset=wl.hot_offset)
+        g = self.cluster.graph
+        indptr = np.asarray(g.u_indptr, np.int64)
+        nnz = int((indptr[rows + 1] - indptr[rows]).sum())
+        pad = self.config.pad_multiple
+        pad_to = max(pad, -(-nnz // pad) * pad)
+        batch = SparseBatch.from_graph(g, rows, self.cluster._labels,
+                                       pad_to=pad_to)
+        need = np.zeros(g.num_v, bool)
+        need[np.asarray(batch.col_ids)[:nnz]] = True
+        return Request(tenant=wl.name, home=home, rows=rows, batch=batch,
+                       need=need, examples=rows.size, tokens=nnz)
+
+    def issue(self, req: Request, t: int):
+        """Price and issue the request's pull; returns a ``PullHandle``."""
+        plan = self.cluster.plan_pull(req.home, need=req.need)
+        secs = self.bw.per_source(plan.src_bytes, req.home, self.straggle)
+        retry = self.config.retry
+        exclude: set[int] = set()
+        penalty = 0.0   # timeout clocks run concurrently with the wire
+        for j in np.flatnonzero(plan.src_bytes):
+            j = int(j)
+            if j == req.home:
+                continue
+            if j in self.suspect:
+                exclude.add(j)       # circuit open: skip at zero cost
+                continue
+            link_s = float("inf") if j in self.dead else float(secs[j])
+            delivered, spent = retry.admit(link_s)
+            penalty = max(penalty, spent)
+            if not delivered:
+                # retry budget exhausted: bounded-staleness fallback —
+                # this source's entries stay stale in the buffer
+                exclude.add(j)
+                self.suspect.add(j)
+        now = time.perf_counter()
+        wire = self.bw.ingress_seconds(plan.src_bytes, req.home,
+                                       self.straggle, exclude)
+        # the home NIC serializes transfers: a still-draining push (or a
+        # previous pull) pushes this transfer's completion out
+        done = self.link.acquire(req.home, now, wire)
+        _count_dispatch("serving_pull")
+        return self.cluster.pull_nowait(plan, frozenset(exclude),
+                                        wire_s=done - now, wait_s=penalty)
+
+    def compute(self, req: Request, payload: jax.Array):
+        cfg = self.cluster.cfg
+        _count_dispatch("serving_compute")
+        return _serve_step(req.batch, payload, jnp.asarray(req.need),
+                           lr=cfg.lr, lam=cfg.lam,
+                           update=self.config.update)
+
+    def commit(self, req: Request, out, t: int) -> dict:
+        new_w, g, loss = out
+        mask = req.need & (np.asarray(g) != 0)
+        push = self.cluster.meter_push(req.home, mask)
+        # push is fire-and-forget (the τ model absorbs its latency) but
+        # still drains real bandwidth: book the home NIC so the machine's
+        # next pull queues behind it instead of pretending it was free
+        push_wire = (push["inter_bytes"] / self.bw.bandwidth
+                     * float(self.straggle[req.home]))
+        if push_wire > 0:
+            self.link.acquire(req.home, time.perf_counter(), push_wire)
+        if self.config.update:
+            self.cluster.commit_weights(new_w)
+        return {"loss": float(loss),
+                "push_inner_bytes": push["inner_bytes"],
+                "push_inter_bytes": push["inter_bytes"],
+                "push_wire_s": push_wire}
+
+
+class ServingEngine:
+    """The event loop: sync (pull → compute → push per request) or async
+    (double-buffered — issue pull t+1, then block on pull t)."""
+
+    def __init__(self, source, prefetch: bool | None = None,
+                 warmup: int | None = None):
+        self.source = source
+        src_cfg = getattr(source, "config", None)
+        self.prefetch = (src_cfg.prefetch if prefetch is None and src_cfg
+                         else bool(prefetch))
+        self.warmup = (src_cfg.warmup if warmup is None and src_cfg
+                       else int(warmup or 0))
+        self.recorder = LatencyRecorder()
+        self.overlap = OverlapMeter()
+
+    def run(self, num_requests: int) -> dict:
+        rec, meter = self.recorder, self.overlap
+        src = self.source
+        wall0 = None
+        if self.prefetch:
+            src.on_step(0)
+            cur = None
+            if num_requests > 0:
+                req0 = src.next_request(0)
+                cur = (req0, src.issue(req0, 0))
+            for t in range(num_requests):
+                req, handle = cur
+                if t == self.warmup:
+                    wall0 = time.perf_counter()
+                nxt = None
+                if t + 1 < num_requests:
+                    # double buffer: issue pull t+1 BEFORE blocking on
+                    # pull t — its wire time ticks behind this step's
+                    # compute; the view it returns is ≤ 1 commit stale
+                    src.on_step(t + 1)
+                    nreq = src.next_request(t + 1)
+                    nxt = (nreq, src.issue(nreq, t + 1))
+                self._serve_one(req, handle, t, rec, meter)
+                cur = nxt
+        else:
+            for t in range(num_requests):
+                if t == self.warmup:
+                    wall0 = time.perf_counter()
+                src.on_step(t)
+                req = src.next_request(t)
+                handle = src.issue(req, t)
+                self._serve_one(req, handle, t, rec, meter)
+        wall_s = (time.perf_counter() - wall0) if wall0 is not None else 0.0
+        out = rec.summary(wall_s=wall_s)
+        out["mode"] = "async" if self.prefetch else "sync"
+        out["overlap"] = meter.as_dict()
+        return out
+
+    def _serve_one(self, req, handle, t, rec, meter) -> None:
+        src = self.source
+        tb = time.perf_counter()
+        payload = handle.block()
+        blocked = time.perf_counter() - tb
+        tc = time.perf_counter()
+        out = src.compute(req, payload)
+        jax.block_until_ready(out)
+        compute = time.perf_counter() - tc
+        stats = src.commit(req, out, t)
+        end = time.perf_counter()
+        rec.add(RequestRecord(
+            tenant=req.tenant, step=t, home=req.home,
+            examples=req.examples, tokens=req.tokens,
+            latency_s=end - handle.issued_at,
+            wire_s=handle.wire_s, wait_s=handle.wait_s,
+            blocked_s=blocked, compute_s=compute,
+            fresh_entries=handle.fresh_entries,
+            stale_entries=handle.stale_entries,
+            pull_inter_bytes=handle.inter_bytes,
+            push_inter_bytes=stats.get("push_inter_bytes", 0),
+            warmup=t < self.warmup))
+        if t >= self.warmup:
+            meter.add(handle.wire_s, handle.wait_s, blocked, compute)

@@ -1,0 +1,164 @@
+"""Latency accounting for the serving engine (paper §5.5, closed loop).
+
+``BandwidthModel`` prices each pull against the same wall-clock model
+``PSCluster`` uses for training: a machine's NIC serializes its
+inter-machine bytes (``max_i inter_bytes_i / bandwidth``), so a pull's
+transfer time is the *sum* of the remote slices arriving at the home
+worker's ingress link, each inflated by its source's straggle factor
+from the chaos layer.  ``LinkClock`` extends that to concurrent
+transfers: every transfer books the home NIC for its duration, so a
+push still draining delays the next pull on the same machine —
+fire-and-forget pushes occupy bandwidth without blocking the request.
+The engine makes the modeled seconds *real* (the pull handle sleeps
+them out), so throughput and overlap are measured on the wall clock,
+not inferred from byte counts.
+
+``LatencyRecorder`` accumulates one ``RequestRecord`` per served request
+and reduces them to the numbers ``BENCH_system.json`` reports: p50/p99
+request latency, examples/s and tokens/s, and the overlap split (wire
+time vs time actually spent blocked on the pull — their difference is
+communication hidden behind compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["BandwidthModel", "LinkClock", "RequestRecord",
+           "LatencyRecorder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthModel:
+    """Per-link transfer pricing: bytes / bandwidth × straggle factor."""
+
+    bandwidth: float = 125e6  # 1 GbE, matching PSCluster's default
+
+    def per_source(self, src_bytes: np.ndarray, home: int,
+                   straggle: np.ndarray | None = None) -> np.ndarray:
+        """Seconds each source machine needs to ship its slice to
+        ``home``.  The home machine's slice is local (0 s)."""
+        secs = np.asarray(src_bytes, np.float64) / self.bandwidth
+        if straggle is not None:
+            secs = secs * np.asarray(straggle, np.float64)[: secs.shape[0]]
+        if 0 <= home < secs.shape[0]:
+            secs[home] = 0.0
+        return secs
+
+    def ingress_seconds(self, src_bytes: np.ndarray, home: int,
+                        straggle: np.ndarray | None = None,
+                        exclude=()) -> float:
+        """Modeled pull transfer time: the remote slices serialize into
+        the home worker's ingress link (PSCluster's per-machine
+        ``inter_bytes / bandwidth`` wall-clock model)."""
+        secs = self.per_source(src_bytes, home, straggle)
+        for j in exclude:
+            if 0 <= j < secs.shape[0]:
+                secs[j] = 0.0
+        return float(secs.sum())
+
+
+class LinkClock:
+    """Per-machine NIC availability: transfers book the link in issue
+    order, so a fire-and-forget push still drains real (modeled)
+    bandwidth and delays the machine's next transfer."""
+
+    def __init__(self, k: int):
+        self.free_at = np.zeros(k, np.float64)
+
+    def resize(self, k: int) -> None:
+        if k > self.free_at.shape[0]:
+            self.free_at = np.concatenate(
+                [self.free_at, np.zeros(k - self.free_at.shape[0])])
+        else:
+            self.free_at = self.free_at[:k]
+
+    def acquire(self, machine: int, now: float, seconds: float) -> float:
+        """Book ``seconds`` of the machine's link starting no earlier than
+        ``now``; returns the completion time."""
+        start = max(now, float(self.free_at[machine]))
+        self.free_at[machine] = start + seconds
+        return start + seconds
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Everything measured for one served request."""
+
+    tenant: str
+    step: int
+    home: int
+    examples: int
+    tokens: int
+    latency_s: float          # pull issue → commit, wall clock
+    wire_s: float             # modeled pull transfer time
+    wait_s: float             # retry/timeout penalty on failed links
+    blocked_s: float          # wall time actually spent in handle.block()
+    compute_s: float          # block_until_ready-metered device compute
+    fresh_entries: int = 0
+    stale_entries: int = 0    # entries served stale (dead/timed-out shard)
+    pull_inter_bytes: int = 0
+    push_inter_bytes: int = 0
+    warmup: bool = False      # excluded from the summary statistics
+
+
+class LatencyRecorder:
+    """Accumulate ``RequestRecord`` rows; reduce to benchmark numbers."""
+
+    def __init__(self):
+        self.records: list[RequestRecord] = []
+
+    def add(self, rec: RequestRecord) -> None:
+        self.records.append(rec)
+
+    def summary(self, wall_s: float | None = None) -> dict:
+        """Reduce the non-warmup records.
+
+        ``wall_s`` is the engine-measured wall clock of the timed window
+        (throughput denominators); defaults to the sum of latencies,
+        which is only correct for the sync engine."""
+        recs = [r for r in self.records if not r.warmup]
+        if not recs:
+            return {"requests": 0}
+        lat_ms = np.array([r.latency_s for r in recs]) * 1e3
+        examples = sum(r.examples for r in recs)
+        tokens = sum(r.tokens for r in recs)
+        if wall_s is None:
+            wall_s = float(sum(r.latency_s for r in recs))
+        wire = sum(r.wire_s for r in recs)
+        wait = sum(r.wait_s for r in recs)
+        blocked = sum(r.blocked_s for r in recs)
+        compute = sum(r.compute_s for r in recs)
+        hidden = max(0.0, wire + wait - blocked)
+        tenants = {}
+        for name in sorted({r.tenant for r in recs}):
+            tl = np.array([r.latency_s for r in recs if r.tenant == name])
+            tenants[name] = {
+                "requests": int(tl.size),
+                "p50_ms": float(np.percentile(tl, 50) * 1e3),
+                "p99_ms": float(np.percentile(tl, 99) * 1e3),
+            }
+        return {
+            "requests": len(recs),
+            "examples": int(examples),
+            "tokens": int(tokens),
+            "wall_s": float(wall_s),
+            "examples_s": examples / wall_s if wall_s > 0 else 0.0,
+            "tokens_s": tokens / wall_s if wall_s > 0 else 0.0,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "mean_ms": float(lat_ms.mean()),
+            "wire_s": float(wire),
+            "wait_s": float(wait),
+            "blocked_s": float(blocked),
+            "compute_s": float(compute),
+            "hidden_s": float(hidden),
+            "hidden_frac": float(hidden / (wire + wait))
+            if wire + wait > 0 else 0.0,
+            "stale_entries": int(sum(r.stale_entries for r in recs)),
+            "fresh_entries": int(sum(r.fresh_entries for r in recs)),
+            "pull_inter_bytes": int(sum(r.pull_inter_bytes for r in recs)),
+            "push_inter_bytes": int(sum(r.push_inter_bytes for r in recs)),
+            "per_tenant": tenants,
+        }

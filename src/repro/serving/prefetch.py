@@ -1,0 +1,108 @@
+"""Double-buffered async pull/compute overlap (§4.3 applied to serving).
+
+The serving engine issues the *next* request's working-set pull before
+the current request's compute is dispatched; by the time the current
+step commits, the next pull's modeled wire time has been ticking behind
+the device work.  The buffered weight view is at most one commit stale —
+exactly the bounded-delay τ = 1 consistency DBPG trains under, so the
+serving math is the training math.
+
+Nothing here *assumes* the overlap happens: ``PullHandle.block()`` (in
+``ml/ps.py``) sleeps out only the transfer time that is still
+outstanding, and the engine meters that residual (``blocked_s``) against
+the modeled wire time with ``jax.block_until_ready`` fences around the
+compute.  ``OverlapMeter`` folds the split; ``hidden_s`` is the
+communication the schedule actually removed from the critical path.
+
+``prefetch_batches`` is the same idea for plain training loops: stage
+the next batch's host→device transfer while the current step runs
+(JAX transfers are async until forced), at a bounded depth.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Iterable, Iterator, TypeVar
+
+__all__ = ["OverlapMeter", "ReadyHandle", "prefetch_batches"]
+
+T = TypeVar("T")
+S = TypeVar("S")
+
+
+@dataclasses.dataclass
+class OverlapMeter:
+    """Cumulative pull/compute overlap accounting across a run."""
+
+    wire_s: float = 0.0       # modeled transfer time, summed
+    wait_s: float = 0.0       # retry/timeout penalties, summed
+    blocked_s: float = 0.0    # wall time actually spent blocked on pulls
+    compute_s: float = 0.0    # block_until_ready-metered device compute
+
+    def add(self, wire_s: float, wait_s: float, blocked_s: float,
+            compute_s: float) -> None:
+        self.wire_s += wire_s
+        self.wait_s += wait_s
+        self.blocked_s += blocked_s
+        self.compute_s += compute_s
+
+    @property
+    def hidden_s(self) -> float:
+        """Transfer time hidden behind compute (the measured overlap)."""
+        return max(0.0, self.wire_s + self.wait_s - self.blocked_s)
+
+    def as_dict(self) -> dict:
+        return {"wire_s": self.wire_s, "wait_s": self.wait_s,
+                "blocked_s": self.blocked_s, "compute_s": self.compute_s,
+                "hidden_s": self.hidden_s}
+
+
+@dataclasses.dataclass
+class ReadyHandle:
+    """A handle for payloads with no transfer to wait for (already-staged
+    batches, decode tokens) — lets non-PS sources drive the same engine
+    loop as metered pulls.  Carries zeroed metering fields so the
+    engine's records stay uniform."""
+
+    payload: object
+    wire_s: float = 0.0
+    wait_s: float = 0.0
+    inner_bytes: int = 0
+    inter_bytes: int = 0
+    fresh_entries: int = 0
+    stale_entries: int = 0
+    issued_at: float = dataclasses.field(
+        default_factory=time.perf_counter)
+
+    def block(self):
+        return self.payload
+
+
+def prefetch_batches(batches: Iterable[T],
+                     stage: Callable[[T], S] | None = None,
+                     depth: int = 2) -> Iterator[S]:
+    """Yield staged batches, keeping up to ``depth`` staged ahead.
+
+    ``stage`` typically moves a host batch to device (``jnp.asarray`` /
+    tree-map); because JAX device puts are asynchronous, the transfer of
+    batch t+1 overlaps the caller's compute on batch t.  ``depth=1``
+    degenerates to the unstaged loop."""
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    if stage is None:
+        stage = lambda x: x  # noqa: E731
+    buf: collections.deque = collections.deque()
+    it = iter(batches)
+    try:
+        while len(buf) < depth:
+            buf.append(stage(next(it)))
+    except StopIteration:
+        pass
+    while buf:
+        out = buf.popleft()
+        try:
+            buf.append(stage(next(it)))
+        except StopIteration:
+            pass
+        yield out

@@ -1,0 +1,92 @@
+"""Request → worker routing from the live placement.
+
+A request is served by one *home* machine: the worker whose row shard
+hosts the examples the request touches.  The router keeps a per-machine
+pool of example rows derived from the cluster's current ``parts_u`` and
+re-derives it whenever ``PSCluster.placement_version`` moves — which is
+how elastic grow/shrink/repair (``ElasticSession.sync_cluster``) become
+visible to in-flight traffic without any coordination beyond the version
+counter.
+
+Sampling is Zipf *within* the home pool (production traffic is
+power-law over a tenant's own hot set), with a per-tenant offset so
+different tenants hammer different hot rows.  Keeping the skew inside
+the shard is what lets a locality-aware placement pay off: the rows a
+request batches together share features, so their working set — and the
+pull bytes — concentrate on few machines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["Router"]
+
+
+class Router:
+    """Maps requests to home machines and samples their row batches."""
+
+    def __init__(self, cluster):
+        self.version = -1
+        self.pools: list[np.ndarray] = []
+        self.k = 0
+        self._rr = 0
+        self._zipf_cache: dict[tuple[int, float], np.ndarray] = {}
+        self.refresh(cluster)
+
+    def refresh(self, cluster) -> bool:
+        """Re-derive the row pools if the placement moved; returns whether
+        anything changed."""
+        if cluster.placement_version == self.version:
+            return False
+        self.version = cluster.placement_version
+        self.k = cluster.k
+        self.pools = [np.asarray(rows) for rows in cluster.rows]
+        return True
+
+    def live(self, dead=()) -> list[int]:
+        return [m for m in range(self.k)
+                if m not in dead and self.pools[m].size > 0]
+
+    def next_home(self, dead=()) -> int:
+        """Round-robin over live machines with non-empty pools."""
+        live = self.live(dead)
+        if not live:
+            raise RuntimeError("no live machine with examples to serve")
+        home = live[self._rr % len(live)]
+        self._rr += 1
+        return home
+
+    def _zipf_p(self, n: int, s: float) -> np.ndarray:
+        key = (n, s)
+        p = self._zipf_cache.get(key)
+        if p is None:
+            p = 1.0 / np.arange(1, n + 1) ** s
+            p /= p.sum()
+            self._zipf_cache[key] = p
+        return p
+
+    def sample_rows(self, home: int, size: int, rng: np.random.Generator,
+                    zipf_s: float = 1.1, hot_offset: int = 0) -> np.ndarray:
+        """Zipf-skewed batch from the home machine's pool.  ``hot_offset``
+        rotates the pool so tenants get distinct hot sets."""
+        pool = self.pools[home]
+        if pool.size == 0:
+            raise ValueError(f"machine {home} hosts no examples")
+        if hot_offset:
+            pool = np.roll(pool, -(hot_offset % pool.size))
+        idx = rng.choice(pool.size, size=size,
+                         p=self._zipf_p(pool.size, zipf_s))
+        return pool[idx]
+
+    def route(self, rows: np.ndarray, parts_u: np.ndarray,
+              dead=()) -> int:
+        """Home for an explicit row set: majority vote of the rows'
+        hosting machines, skipping dead ones."""
+        owners = np.asarray(parts_u)[np.asarray(rows)]
+        counts = np.bincount(owners, minlength=self.k)
+        for m in dead:
+            if 0 <= m < counts.shape[0]:
+                counts[m] = 0
+        if counts.sum() == 0:
+            return self.next_home(dead)
+        return int(np.argmax(counts))

@@ -4,9 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import random_parts
+from repro.core import from_edges, random_parts
 from repro.core.placement import build_placement, gather_traffic
-from repro.ml import DBPGConfig, PSCluster, make_problem
+from repro.ml import DBPGConfig, PSCluster, TrafficMeter, make_problem
 from repro.ml.dbpg import dequantize_int8, kkt_filter, quantize_int8, soft_threshold
 from repro.graphs import ctr_like
 
@@ -73,3 +73,77 @@ def test_soft_threshold():
     w = jnp.asarray([-3.0, -0.1, 0.0, 0.1, 3.0])
     out = np.asarray(soft_threshold(w, 0.5))
     np.testing.assert_allclose(out, [-2.5, 0, 0, 0, 2.5])
+
+
+def test_traffic_meter_bare_regression():
+    """A bare TrafficMeter() (no per_machine pre-sizing) must not crash on
+    its first inter-machine add — per_machine sizes itself lazily."""
+    m = TrafficMeter()
+    m.add(0, 0, 8)                  # inner: no per-machine map needed
+    assert m.per_machine is None
+    m.add(2, 5, 4)                  # used to crash: per_machine was None
+    assert (m.inner_bytes, m.inter_bytes, m.total) == (8, 4, 12)
+    assert m.per_machine.shape[0] == 6
+    assert m.per_machine[2] == 4 == m.per_machine[5]
+    m.add(7, 0, 2)                  # grows past the current size
+    assert m.per_machine.shape[0] == 8
+    assert list(m.per_machine) == [2, 0, 4, 0, 0, 4, 0, 2]
+
+
+def _tiny_cluster(cfg=None):
+    """4 examples x 6 features, k=2.  Worker 0 hosts rows {0,1} (working
+    set {0,1,2,3}), worker 1 hosts rows {2,3} (working set {3,4,5,0});
+    server 0 owns features {0,1,2}, server 1 owns {3,4,5}."""
+    g = from_edges(4, 6,
+                   np.array([0, 0, 1, 1, 1, 2, 2, 3, 3, 3]),
+                   np.array([0, 1, 1, 2, 3, 3, 4, 4, 5, 0]))
+    if cfg is None:
+        cfg = DBPGConfig(lam=0.0, lr=0.1, kkt_eps=0.0, compress=False,
+                         max_delay=0, error_feedback=False)
+    return PSCluster(g, np.ones(4, np.float32), np.array([0, 0, 1, 1]),
+                     np.array([0, 0, 0, 1, 1, 1]), 2, cfg)
+
+
+def test_metering_hand_computed_4x6():
+    """Exact push/pull byte accounting on the tiny cluster, two steps.
+
+    Push (4 B values, +4 B/key on the first send to a server — key
+    caching drops them in step 2; kkt_eps=0 keeps every touched coord):
+      step 1: w0->s0 3x8=24, w1->s1 3x8=24 inner; w0->s1 8, w1->s0 8 inter
+      step 2: keys cached -> 12+12 inner, 4+4 inter
+    Pull (4 B per *changed* needed value; lam=0 and a nonzero gradient
+    move every touched coordinate every step, no key bytes):
+      per step: w0<-s0 12, w1<-s1 12 inner; w0<-s1 4, w1<-s0 4 inter
+    Totals after 2 steps: inner 48+24+48 = 120, inter 16+8+16 = 40; every
+    inter byte crosses the m0<->m1 link, so per_machine = [40, 40]."""
+    cl = _tiny_cluster()
+    cl.run(2)
+    assert cl.meter.inner_bytes == 120
+    assert cl.meter.inter_bytes == 40
+    assert list(cl.meter.per_machine) == [40, 40]
+
+
+def test_pull_plan_value_delta_cache_and_stale_fallback():
+    """plan_pull prices exactly the changed entries; pull_nowait refreshes
+    the worker cache (second plan owes nothing) and an excluded source's
+    entries stay stale — still owed on the next plan."""
+    cl = _tiny_cluster()
+    cl.commit_weights(np.arange(1, 7, dtype=np.float32))
+    plan = cl.plan_pull(0)
+    # worker 0 needs {0,1,2,3}, all changed vs its zeroed cache
+    assert plan.total_bytes == 16
+    assert list(plan.src_bytes) == [12, 4]      # {0,1,2} from s0, {3} from s1
+    h = cl.pull_nowait(plan)
+    assert h.fresh_entries == 4 and h.stale_entries == 0
+    assert h.inner_bytes == 12 and h.inter_bytes == 4
+    np.testing.assert_array_equal(np.asarray(h.buffer)[:4], [1, 2, 3, 4])
+    assert cl.plan_pull(0).total_bytes == 0     # cache now current
+    # server 1 excluded (dead/timed-out): its entry is served stale
+    cl.commit_weights(np.arange(11, 17, dtype=np.float32))
+    h2 = cl.pull_nowait(cl.plan_pull(0), exclude=frozenset({1}))
+    assert h2.stale_entries == 1 and h2.fresh_entries == 3
+    buf = np.asarray(h2.buffer)
+    np.testing.assert_array_equal(buf[:3], [11, 12, 13])
+    assert buf[3] == 4.0                        # the stale value, not 14
+    nxt = cl.plan_pull(0)
+    assert nxt.src_bytes[1] == 4 and nxt.src_bytes[0] == 0

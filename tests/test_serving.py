@@ -1,0 +1,260 @@
+"""repro.serving: the request-driven PS serving engine — measured async
+overlap, O(1) dispatches per request, bounded-staleness fault fallback,
+elastic composition, and the LM-decode parity oracle."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (ChaosEvent, ChaosSchedule, ElasticConfig,
+                       ElasticSession, ParsaConfig, ParsaStreamConfig,
+                       partition)
+from repro.core import random_parts
+from repro.core.jax_partition import dispatch_counter
+from repro.graphs import ctr_like
+from repro.ml import DBPGConfig, PSCluster
+from repro.runtime import RetryPolicy
+from repro.serving import (PSRequestSource, RequestMix, Router,
+                           ServingConfig, ServingEngine, ZipfWorkload,
+                           prefetch_batches)
+
+K = 4
+
+
+@pytest.fixture(scope="module")
+def serving_graph():
+    g = ctr_like(600, 1200, nnz_per_row=12, clusters=8, locality=0.85,
+                 seed=0)
+    labels = np.where(np.random.default_rng(0).random(g.num_u) < 0.5,
+                      1.0, -1.0).astype(np.float32)
+    return g, labels
+
+
+def _cluster(g, labels, bandwidth=2.5e5, parts=None):
+    if parts is None:
+        parts = (random_parts(g.num_u, K, 0), random_parts(g.num_v, K, 1))
+    cfg = DBPGConfig(lam=0.05, lr=0.1, kkt_eps=0.0, compress=False,
+                     error_feedback=False)
+    cl = PSCluster(g, labels, parts[0], parts[1], K, cfg,
+                   bandwidth=bandwidth)
+    cl.commit_weights(np.random.default_rng(1).normal(
+        0, 0.1, g.num_v).astype(np.float32))
+    return cl
+
+
+def _mix(batch=32):
+    return RequestMix((ZipfWorkload("t", batch=batch, zipf_s=1.1),))
+
+
+def _engine(g, labels, prefetch, bandwidth=2.5e5, chaos=None, elastic=None,
+            warmup=2, retry=None, parts=None):
+    cluster = _cluster(g, labels, bandwidth=bandwidth, parts=parts)
+    cfg = ServingConfig(prefetch=prefetch, warmup=warmup, seed=0,
+                        pad_multiple=512,
+                        **({"retry": retry} if retry else {}))
+    source = PSRequestSource(cluster, _mix(), cfg, chaos=chaos,
+                             elastic=elastic)
+    return ServingEngine(source), source, cluster
+
+
+# ------------------------------------------------------------------ engine
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_engine_smoke_one_dispatch_per_request(serving_graph, prefetch):
+    g, labels = serving_graph
+    n, warmup = 10, 2
+    engine, src, _ = _engine(g, labels, prefetch, warmup=warmup)
+    with dispatch_counter() as counts:
+        s = engine.run(n)
+    # O(1) jitted dispatches per request: one pull issue + one serve step
+    assert counts["serving_pull"] == n, counts
+    assert counts["serving_compute"] == n, counts
+    assert s["mode"] == ("async" if prefetch else "sync")
+    assert s["requests"] == n - warmup
+    assert s["examples"] == 32 * (n - warmup)   # one 32-row tenant
+    assert s["tokens"] > 0 and s["wall_s"] > 0
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+    assert s["pull_inter_bytes"] > 0 and s["push_inter_bytes"] > 0
+    assert s["stale_entries"] == 0              # healthy fleet: no fallback
+
+
+def test_async_overlap_is_measured_not_assumed(serving_graph):
+    """Same cluster/workload, wire-dominated (slow link): async hides the
+    transfer behind compute — blocked_s collapses while wire_s stays."""
+    g, labels = serving_graph
+    bw = 5e4
+    engine_s, _, _ = _engine(g, labels, prefetch=False, bandwidth=bw)
+    engine_a, _, _ = _engine(g, labels, prefetch=True, bandwidth=bw)
+    sync = engine_s.run(12)
+    asyn = engine_a.run(12)
+    assert asyn["wire_s"] == pytest.approx(sync["wire_s"], rel=0.5)
+    assert asyn["blocked_s"] < sync["blocked_s"] * 0.8
+    assert asyn["hidden_s"] > 0                  # wire actually overlapped
+    assert asyn["wall_s"] < sync["wall_s"]
+
+
+def test_update_propagates_between_requests(serving_graph):
+    """Serving is online DBPG: commits move the server weights."""
+    g, labels = serving_graph
+    engine, src, cluster = _engine(g, labels, prefetch=True)
+    w0 = np.asarray(cluster.w).copy()
+    engine.run(6)
+    assert not np.array_equal(np.asarray(cluster.w), w0)
+
+
+# ------------------------------------------------------------------- fault
+def test_retry_policy_admission():
+    p = RetryPolicy(timeout_s=0.05, retries=1, backoff=2.0)
+    assert p.admit(0.01) == (True, 0.0)          # fits the first deadline
+    ok, wait = p.admit(0.07)                     # fits the backed-off retry
+    assert ok and wait == pytest.approx(0.05)
+    ok, wait = p.admit(float("inf"))             # killed link: never fits
+    assert not ok and wait == pytest.approx(p.budget_s)
+    assert p.budget_s == pytest.approx(0.15)
+    with pytest.raises(ValueError):
+        RetryPolicy(timeout_s=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff=0.5)
+
+
+def test_kill_mid_serve_falls_back_to_stale(serving_graph):
+    """A shard killed mid-serve must NOT stall the engine: its links fail
+    their retry budget once, the circuit opens (suspect), and requests
+    keep serving from the stale buffer — bounded staleness, measured."""
+    g, labels = serving_graph
+    chaos = ChaosSchedule([ChaosEvent(feed=3, kind="kill", machine=1)],
+                          seed=0)
+    retry = RetryPolicy(timeout_s=0.002, retries=1)
+    engine, src, _ = _engine(g, labels, prefetch=True, chaos=chaos,
+                             retry=retry)
+    s = engine.run(12)
+    assert src.dead == {1}
+    assert 1 in src.suspect                      # circuit opened after kill
+    assert s["stale_entries"] > 0                # served with stale entries
+    assert s["requests"] == 10
+    assert (3, "kill", 1) in src.events
+    # the timeout budget is paid at most once per link before the circuit
+    # opens — total wait is bounded by one budget, not one per request
+    assert s["wait_s"] <= retry.budget_s + 1e-9
+
+
+def test_straggler_inflates_wire_then_recovers(serving_graph):
+    g, labels = serving_graph
+    chaos = ChaosSchedule([
+        ChaosEvent(feed=2, kind="straggle", machine=1, factor=50.0),
+        ChaosEvent(feed=8, kind="recover", machine=1),
+    ], seed=0)
+    engine, src, _ = _engine(g, labels, prefetch=False, bandwidth=1e6,
+                             chaos=chaos)
+    engine.run(12)
+    assert src.straggle[1] == 1.0                # recovered
+    recs = engine.recorder.records
+    slow = [r.wire_s for r in recs if 2 <= r.step < 8 and r.home != 1]
+    fast = [r.wire_s for r in recs if r.step >= 8]
+    assert max(slow) > max(fast)                 # straggled link showed up
+
+
+def test_elastic_repair_under_load(serving_graph):
+    """Kill with an ElasticSession attached: warm §4.4 repair re-places
+    the lost shard's rows, the new placement reaches the router via
+    placement_version, and serving continues with NO dead machine."""
+    g, labels = serving_graph
+    scfg = ParsaStreamConfig(base=ParsaConfig(
+        k=K, backend="device_scan", refine_v=False, seed=0))
+    es = ElasticSession(ElasticConfig(stream=scfg), num_v=g.num_v)
+    es.feed(g)
+    cluster = _cluster(g, labels,
+                       parts=(es.parts.copy(), random_parts(g.num_v, K, 1)))
+    chaos = ChaosSchedule([ChaosEvent(feed=3, kind="kill", machine=2)],
+                          seed=0)
+    cfg = ServingConfig(prefetch=True, warmup=2, seed=0, pad_multiple=512)
+    src = PSRequestSource(cluster, _mix(), cfg, chaos=chaos, elastic=es)
+    engine = ServingEngine(src)
+    v0 = cluster.placement_version
+    s = engine.run(10)
+    assert src.dead == set()                     # repaired, not abandoned
+    assert cluster.placement_version > v0        # re-shard reached serving
+    assert src.router.version == cluster.placement_version
+    assert s["requests"] == 8
+    assert len(es.ops) == 1 and es.ops[0].kind == "repair"
+
+
+# ------------------------------------------------------------------ router
+def test_router_pools_and_routing(serving_graph):
+    g, labels = serving_graph
+    cluster = _cluster(g, labels)
+    r = Router(cluster)
+    for m in range(K):
+        assert np.array_equal(r.pools[m], np.flatnonzero(cluster.parts_u == m))
+    homes = [r.next_home(dead={1}) for _ in range(6)]
+    assert 1 not in homes                        # dead machine skipped
+    assert set(homes) == {0, 2, 3}               # round-robin over live
+    rng = np.random.default_rng(0)
+    rows = r.sample_rows(2, 64, rng, zipf_s=1.2, hot_offset=5)
+    assert np.isin(rows, r.pools[2]).all()       # home pool only
+    # explicit row sets route to the majority hosting machine
+    assert r.route(r.pools[3][:8], cluster.parts_u) == 3
+    assert r.route(r.pools[3][:8], cluster.parts_u, dead={3}) != 3
+    # refresh is a no-op until the placement version moves
+    assert not r.refresh(cluster)
+    cluster.apply_placement(cluster.parts_u, cluster.parts_v)
+    assert r.refresh(cluster)
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError):
+        ZipfWorkload("t", batch=0)
+    with pytest.raises(ValueError):
+        ZipfWorkload("t", weight=0.0)
+    with pytest.raises(ValueError):
+        RequestMix(())
+
+
+# ---------------------------------------------------------------- prefetch
+def test_prefetch_batches_order_and_staging():
+    staged = []
+
+    def stage(x):
+        staged.append(x)
+        return x * 10
+
+    out = list(prefetch_batches(range(5), stage, depth=3))
+    assert out == [0, 10, 20, 30, 40]
+    assert staged == [0, 1, 2, 3, 4]
+    assert list(prefetch_batches([], stage)) == []
+    assert list(prefetch_batches([7], depth=1)) == [7]
+    with pytest.raises(ValueError):
+        next(prefetch_batches(range(3), depth=0))
+
+
+def test_prefetch_batches_stages_ahead():
+    """depth=2 keeps one batch staged beyond the one being consumed."""
+    staged = []
+    it = prefetch_batches(range(4), staged.append, depth=2)
+    next(it)
+    assert staged == [0, 1, 2]   # consumed 0, staged 2 ahead
+
+
+# ----------------------------------------------------------- decode parity
+def test_decode_engine_matches_oracle():
+    """The engine-routed LM decode is bit-identical to the pre-engine
+    reference loop, in both sync and async modes."""
+    from repro.configs import get_config
+    from repro.launch.serve import decode_loop, decode_loop_engine
+    from repro.launch.steps import make_serve_step
+
+    cfg = get_config("qwen3-14b").reduced()
+    model, serve_step = make_serve_step(cfg)
+    serve_step = jax.jit(serve_step)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = np.asarray(rng.integers(0, cfg.vocab_size, size=(2, 6)),
+                        np.int32)
+    cache_seq = 6 + 4
+    ref = decode_loop(model, serve_step, params, prompt, gen=4,
+                      cache_seq=cache_seq)
+    for prefetch in (False, True):
+        out, summary = decode_loop_engine(model, serve_step, params, prompt,
+                                          gen=4, cache_seq=cache_seq,
+                                          prefetch=prefetch)
+        np.testing.assert_array_equal(out, ref)
+        assert summary["requests"] == 6 - 1 + 4
+        assert set(summary["per_tenant"]) == {"prefill", "decode"}
