@@ -40,7 +40,8 @@ from repro.api import (ChaosEvent, ChaosSchedule, ElasticConfig,
 from repro.core.jax_partition import dispatch_counter
 from repro.graphs import text_like
 
-from .common import emit, score
+from .common import (CHAOS_MAX_QUALITY_PCT, CHAOS_MIN_REPAIR_SPEEDUP, emit,
+                     score)
 from .report import emit_chaos_bench
 
 # kills/adds per feed index — the "disaster script" both replays follow
@@ -100,7 +101,7 @@ def _clone(snapshot: Path, scfg_final: ParsaStreamConfig,
 
 def run(scale: float = 1.0, k0: int = 8, chunks: int = 12,
         min_repair_speedup: float | None = None,
-        max_quality_pct: float | None = 5.0):
+        max_quality_pct: float | None = CHAOS_MAX_QUALITY_PCT):
     """CI-scale chaos benchmark (same shape as the acceptance run)."""
     return run_acceptance(
         n_u=int(12_000 * scale), num_v=int(16_384 * scale), k0=k0,
@@ -110,8 +111,8 @@ def run(scale: float = 1.0, k0: int = 8, chunks: int = 12,
 
 def run_acceptance(n_u: int = 60_000, num_v: int = 49_152, k0: int = 8,
                    chunks: int = 12, block: int = 256,
-                   min_repair_speedup: float | None = 3.0,
-                   max_quality_pct: float | None = 5.0,
+                   min_repair_speedup: float | None = CHAOS_MIN_REPAIR_SPEEDUP,
+                   max_quality_pct: float | None = CHAOS_MAX_QUALITY_PCT,
                    name: str = "chaos_bench"):
     g = text_like(n_u, num_v, mean_len=20, seed=0)
     base = ParsaConfig(k=k0, backend="device_scan", block_size=block,

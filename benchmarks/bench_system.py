@@ -40,7 +40,7 @@ from repro.ml import DBPGConfig, PSCluster
 from repro.serving import (PSRequestSource, RequestMix, ServingConfig,
                            ServingEngine, ZipfWorkload)
 
-from .common import emit
+from .common import SYSTEM_MIN_ASYNC, SYSTEM_MIN_SPEEDUP, emit
 from .report import emit_system_bench
 
 _ROW_KEYS = ("requests", "examples", "tokens", "wall_s", "examples_s",
@@ -159,7 +159,8 @@ def run(scale: float = 1.0, k: int = 8):
 def run_acceptance(n_u: int = 50_000, n_v: int = 50_000, nnz: int = 24,
                    clusters: int = 64, k: int = 8,
                    bandwidth: float = 2.5e5, timed_requests: int = 40,
-                   min_speedup: float = 1.3, min_async: float = 1.05):
+                   min_speedup: float = SYSTEM_MIN_SPEEDUP,
+                   min_async: float = SYSTEM_MIN_ASYNC):
     """The PR 7 acceptance gate: >= ``min_speedup``x end-to-end on a
     50k x 50k clustered graph, k=8.  ``bandwidth`` is scaled down with
     the graph (~10^3 smaller than the paper's CTR runs) so the modeled

@@ -13,6 +13,26 @@ from repro.graphs import ctr_like, natural_to_bipartite, social_like, text_like
 OUT = pathlib.Path(__file__).resolve().parent / "out"
 OUT.mkdir(exist_ok=True)
 
+# ---------------------------------------------------------------------------
+# Acceptance thresholds shared across benchmark gates.  One place to tune
+# them, one place for CI and the acceptance runs to agree on — bench_chaos,
+# bench_system and bench_slo all import from here instead of hard-coding.
+# ---------------------------------------------------------------------------
+# bench_chaos: warm §4.4 repair must beat a cold repartition by this much,
+# and the post-chaos partition may cost at most this much extra traffic_max
+# vs an oracle static partition at the final k.
+CHAOS_MIN_REPAIR_SPEEDUP = 3.0
+CHAOS_MAX_QUALITY_PCT = 5.0
+# bench_system: parsa placement + async overlap vs random + sync end to
+# end, and the async-vs-sync overlap win at equal placement.
+SYSTEM_MIN_SPEEDUP = 1.3
+SYSTEM_MIN_ASYNC = 1.05
+# bench_slo: the closed loop must keep the windowed modeled p99 within SLO
+# for at least this fraction of post-warmup decision windows, shedding at
+# most this fraction of offered requests while doing it.
+SLO_MIN_HOLD_FRAC = 0.95
+SLO_MAX_SHED_FRAC = 0.05
+
 
 def datasets(scale: float = 1.0) -> dict:
     """Synthetic analogues of Table 1, scaled for a single CPU core."""

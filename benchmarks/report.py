@@ -162,6 +162,51 @@ def emit_system_bench(rows: list[dict], meta: dict | None = None,
     return path
 
 
+def emit_slo_bench(rows: list[dict], meta: dict | None = None,
+                   quick: bool = False) -> pathlib.Path:
+    """Append the closed-loop SLO benchmark's per-decision-window rows to
+    the repo-root ``BENCH_system.json`` trajectory.
+
+    Schema (append-only; the driver tracks these keys across PRs):
+
+    * ``slo_rows`` — one row per autoscaler decision window of the
+      closed-loop run, each carrying:
+      ``window`` (decision index), ``step`` (engine slot of the
+      snapshot), ``k`` (fleet size at decision time), ``p99_ms`` /
+      ``p50_ms`` (modeled sliding-window latency percentiles the loop
+      decides on), ``p99_measured_ms`` (wall-clock window p99, reported
+      but never gated on — CI runners jitter), ``max_occupancy_s``
+      (worst per-machine virtual NIC backlog), ``load_factor`` (burst
+      multiplier in force), ``shed`` (cumulative shed requests),
+      ``served`` (cumulative served requests), ``action`` ("hold" /
+      "grow" / "shrink" / "rebalance"), ``reason`` (the decision's
+      trigger, human-readable), ``within_slo`` (bool: window p99 ≤ SLO),
+      ``open_circuits`` (count of breaker-open links).
+    * ``slo_meta`` — run configuration (graph, k0, SLO, chaos script,
+      admission bound) plus the headline results: ``hold_frac``
+      (fraction of post-warmup windows within SLO, the acceptance
+      gate), ``baseline_hold_frac`` (static-k run, must violate),
+      ``shed_frac``, ``k_trajectory``, ``ops`` (committed elastic ops
+      with their triggers), ``deterministic`` (bit-identical replay).
+
+    ``quick=True`` lands under ``slo_rows_quick`` / ``slo_meta_quick``
+    so a CI smoke run never clobbers the acceptance numbers.  Other
+    emitters' keys (system rows/meta) are preserved — re-runs replace
+    only their own section.
+    """
+    path = ROOT / "BENCH_system.json"
+    if path.exists():
+        payload = json.loads(path.read_text())
+    else:
+        payload = {"benchmark": "parsa_system"}
+    suffix = "_quick" if quick else ""
+    payload[f"slo_rows{suffix}"] = rows
+    payload[f"slo_meta{suffix}"] = meta or {}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path} (+{len(rows)} slo rows{suffix or ''})")
+    return path
+
+
 def pipeline_phase_rows(res, backend: str, refine_backend: str) -> list[dict]:
     """Flatten one PartitionResult's timings into BENCH_pipeline rows."""
     return [

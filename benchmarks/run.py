@@ -17,8 +17,9 @@ def main() -> None:
 
     from . import (bench_chaos, bench_embedding_traffic, bench_fig7_vary_k,
                    bench_fig8_subgraphs, bench_fig9_global_init,
-                   bench_fig10_scalability, bench_kernels, bench_stream,
-                   bench_system, bench_table2, bench_table34_dbpg)
+                   bench_fig10_scalability, bench_kernels, bench_slo,
+                   bench_stream, bench_system, bench_table2,
+                   bench_table34_dbpg)
 
     suites = {
         "table2": lambda: bench_table2.run(scale=scale),
@@ -32,6 +33,7 @@ def main() -> None:
         "stream": lambda: bench_stream.run(scale=scale),
         "chaos": lambda: bench_chaos.run(scale=scale),
         "system": lambda: bench_system.run(scale=scale),
+        "slo": lambda: bench_slo.run(scale=scale),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

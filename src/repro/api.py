@@ -71,12 +71,16 @@ __all__ = [
     "ElasticConfig",
     "ElasticPolicy",
     "ElasticSession",
+    "SLOAutoscaler",
+    "SLOConfig",
     "ThresholdPolicy",
     # serving surface (lazy — see __getattr__)
     "PSRequestSource",
     "RequestMix",
     "ServingConfig",
     "ServingEngine",
+    "TelemetryBus",
+    "TelemetrySnapshot",
     "ZipfWorkload",
 ]
 
@@ -92,12 +96,14 @@ _STREAM_EXPORTS = ("ParsaStreamConfig", "StreamSession", "StreamUpdate",
 # The elastic serving layer (``repro.elastic``: runtime-variable k, chaos
 # injection, straggler-aware routing) is surfaced the same lazy way.
 _ELASTIC_EXPORTS = ("ChaosEvent", "ChaosSchedule", "ElasticConfig",
-                    "ElasticPolicy", "ElasticSession", "ThresholdPolicy")
+                    "ElasticPolicy", "ElasticSession", "SLOAutoscaler",
+                    "SLOConfig", "ThresholdPolicy")
 
 # The request-driven serving engine (``repro.serving``: async pull/compute
 # overlap over PSCluster shards) — same lazy surfacing.
 _SERVING_EXPORTS = ("PSRequestSource", "RequestMix", "ServingConfig",
-                    "ServingEngine", "ZipfWorkload")
+                    "ServingEngine", "TelemetryBus", "TelemetrySnapshot",
+                    "ZipfWorkload")
 
 
 def __getattr__(name: str):

@@ -9,11 +9,17 @@ in ``TrafficCounters.migration_bytes`` and gated by a pluggable
 straggle events for robustness testing (``benchmarks/bench_chaos.py``,
 CI ``chaos-smoke``).
 """
+from .autoscaler import (  # noqa: F401
+    AutoscaleDecision,
+    SLOAutoscaler,
+    SLOConfig,
+)
 from .chaos import ChaosEvent, ChaosSchedule  # noqa: F401
 from .policy import ElasticPolicy, FleetState, ThresholdPolicy  # noqa: F401
 from .session import ElasticConfig, ElasticOp, ElasticSession  # noqa: F401
 
 __all__ = [
+    "AutoscaleDecision",
     "ChaosEvent",
     "ChaosSchedule",
     "ElasticConfig",
@@ -21,5 +27,7 @@ __all__ = [
     "ElasticPolicy",
     "ElasticSession",
     "FleetState",
+    "SLOAutoscaler",
+    "SLOConfig",
     "ThresholdPolicy",
 ]

@@ -20,7 +20,7 @@ import numpy as np
 
 __all__ = ["ChaosEvent", "ChaosSchedule"]
 
-_KINDS = ("kill", "add", "straggle", "recover")
+_KINDS = ("kill", "add", "straggle", "recover", "burst")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +31,9 @@ class ChaosEvent:
     lane for ``straggle``/``recover`` (``None`` = let the schedule's RNG
     pick); ``factor`` is the straggler's slowdown multiplier.  ``add``
     events take no target — the new machine is always the split of the
-    current largest part."""
+    current largest part.  ``burst`` is a *load* event (serving layer
+    only): ``factor`` multiplies request batch sizes from this point on
+    — factor 1.0 calms the burst; streams ignore it."""
 
     feed: int
     kind: str
@@ -47,6 +49,9 @@ class ChaosEvent:
         if self.kind == "straggle" and self.factor <= 1.0:
             raise ValueError(
                 f"straggle factor must be > 1, got {self.factor}")
+        if self.kind == "burst" and self.factor <= 0.0:
+            raise ValueError(
+                f"burst factor must be > 0, got {self.factor}")
 
 
 class ChaosSchedule:

@@ -94,6 +94,8 @@ class ElasticOp:
     moved_u: int                # example rows changing machines
     seconds: float              # wall-clock of plan + (if any) commit
     mode: str = ""              # repair only: "warm" | "cold"
+    partner: int = -1           # grow: new machine id; shrink: retired id
+    telemetry: object = None    # closed loop: triggering TelemetrySnapshot
 
 
 def _range_gather(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -167,9 +169,18 @@ class ElasticSession:
             weights = self.policy.rebalance(self._state(), w)
         upd = self.stream.feed(chunk, worker_weights=weights)
         if workers > 1:
-            base = (upd.timings.get("partition_u", 1.0)
-                    if self.config.observe_wallclock else 1.0)
-            self.ewma.update(base * self._straggle)
+            if self.config.observe_wallclock:
+                # real mode: feed the MEASURED fused-dispatch wall time —
+                # one observation per lane (a single host cannot separate
+                # per-worker times out of one dispatch), with NO synthetic
+                # straggle multiply; injected chaos straggles are invisible
+                # here by design, only actual slowness registers
+                wall = upd.timings.get("partition_u", float("nan"))
+                self.ewma.update(np.full(workers, wall))
+            else:
+                # synthetic mode (default): the injected straggle factors
+                # ARE the per-worker time model — bit-deterministic
+                self.ewma.update(1.0 * self._straggle)
         return upd
 
     def _apply_event(self, ev: ChaosEvent) -> None:
@@ -182,6 +193,8 @@ class ElasticSession:
             self._straggle[ev.machine % workers] = ev.factor
         elif ev.kind == "recover":
             self._straggle[ev.machine % workers] = 1.0
+        elif ev.kind == "burst":
+            pass  # load events target the serving layer, not the stream
 
     # ------------------------------------------------------------- state
     def _state(self, migration_bytes: int = 0,
@@ -203,11 +216,14 @@ class ElasticSession:
             [self.config.stream.base.seed, 0x454C, self._n_ops])
 
     # ---------------------------------------------------------- grow
-    def grow_k(self, force: bool = False) -> ElasticOp:
-        """Split the largest part in two; the new machine ``k`` hosts the
-        second half.  ONE jitted ``_partition_scan`` dispatch over the
-        split part's rows (exact neighbor sets for both halves come out
-        of the scan's S carry).  Commits only when the policy accepts the
+    def grow_k(self, target: int | None = None,
+               force: bool = False) -> ElasticOp:
+        """Split one part in two; the new machine ``k`` hosts the second
+        half.  ``target`` picks the part to split (the closed-loop
+        autoscaler passes the hottest footprint); default is the largest
+        part.  ONE jitted ``_partition_scan`` dispatch over the split
+        part's rows (exact neighbor sets for both halves come out of the
+        scan's S carry).  Commits only when the policy accepts the
         metered migration cost (or ``force=True``)."""
         t0 = time.perf_counter()
         base = self.config.stream.base
@@ -215,7 +231,10 @@ class ElasticSession:
         k = self.k
         parts = self.parts
         sizes = np.bincount(parts, minlength=k)
-        src = int(np.argmax(sizes))
+        if target is not None and 0 <= target < k and sizes[target] >= 2:
+            src = int(target)
+        else:
+            src = int(np.argmax(sizes))
         rows = np.flatnonzero(parts == src)
         if rows.size < 2:
             op = ElasticOp("grow", False, k, k, src, TrafficCounters(),
@@ -270,7 +289,7 @@ class ElasticSession:
                        src, TrafficCounters(tasks=1,
                                             migration_bytes=migration),
                        savings, int(moved.size),
-                       time.perf_counter() - t0)
+                       time.perf_counter() - t0, partner=k)
         self.ops.append(op)
         return op
 
@@ -322,7 +341,7 @@ class ElasticSession:
                        i, TrafficCounters(tasks=1,
                                           migration_bytes=migration),
                        savings, int(moved_rows.size),
-                       time.perf_counter() - t0)
+                       time.perf_counter() - t0, partner=j)
         self.ops.append(op)
         return op
 

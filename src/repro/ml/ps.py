@@ -101,17 +101,18 @@ class PullHandle:
 
     worker: int
     issued_at: float          # perf_counter at issue
-    wire_s: float             # modeled transfer time (max over live links)
+    wire_s: float             # modeled transfer time (pure, per live links)
     wait_s: float             # retry/timeout penalty spent on failed links
     inner_bytes: int
     inter_bytes: int
     fresh_entries: int        # entries actually refreshed
     stale_entries: int        # entries left stale (excluded/dead sources)
     buffer: jax.Array         # (V,) f32 device view of the worker's cache
+    queue_s: float = 0.0      # NIC-backlog delay ahead of the transfer
 
     @property
     def done_at(self) -> float:
-        return self.issued_at + self.wire_s + self.wait_s
+        return self.issued_at + self.wire_s + self.wait_s + self.queue_s
 
     def block(self) -> jax.Array:
         remaining = self.done_at - time.perf_counter()
@@ -329,15 +330,17 @@ class PSCluster:
                         src_bytes=src_bytes.astype(np.int64))
 
     def pull_nowait(self, plan: PullPlan, exclude: frozenset = frozenset(),
-                    wire_s: float = 0.0, wait_s: float = 0.0) -> PullHandle:
+                    wire_s: float = 0.0, wait_s: float = 0.0,
+                    queue_s: float = 0.0) -> PullHandle:
         """Issue the planned pull; returns a device future immediately.
 
         ``exclude`` lists source machines that failed their retry budget
         (dead or timed-out shards): their entries stay stale in the
         worker's buffer — the §4.3 bounded-staleness fallback — and cost
-        no bytes.  ``wire_s``/``wait_s`` are the modeled transfer time and
-        retry penalty (priced by the caller's bandwidth model); the
-        returned handle's ``block()`` makes them real wall-clock."""
+        no bytes.  ``wire_s``/``wait_s``/``queue_s`` are the modeled
+        transfer time, retry penalty, and NIC-backlog delay (priced by the
+        caller's bandwidth model and link clock); the returned handle's
+        ``block()`` makes them real wall-clock."""
         worker = plan.worker
         w_host = np.asarray(self.w)
         fetch = plan.delta.copy()
@@ -367,7 +370,7 @@ class PSCluster:
             wire_s=float(wire_s), wait_s=float(wait_s),
             inner_bytes=inner, inter_bytes=inter,
             fresh_entries=int(fetch.sum()), stale_entries=stale_entries,
-            buffer=buffer)
+            buffer=buffer, queue_s=float(queue_s))
 
     def meter_push(self, worker: int, mask: np.ndarray) -> dict:
         """Meter worker's push of gradient entries ``mask`` to the owning

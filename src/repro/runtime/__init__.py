@@ -1,4 +1,9 @@
-from .fault import TrainLoop, FaultConfig, RetryPolicy  # noqa: F401
+from .fault import (  # noqa: F401
+    CircuitBreaker,
+    FaultConfig,
+    RetryPolicy,
+    TrainLoop,
+)
 from .straggler import (  # noqa: F401
     BoundedDelayAccumulator,
     StragglerConfig,

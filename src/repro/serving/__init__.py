@@ -12,15 +12,18 @@ from .engine import (  # noqa: F401
 from .latency import (  # noqa: F401
     BandwidthModel,
     LatencyRecorder,
+    LatencyWindow,
     LinkClock,
     RequestRecord,
 )
 from .prefetch import OverlapMeter, ReadyHandle, prefetch_batches  # noqa: F401
 from .router import Router  # noqa: F401
+from .telemetry import TelemetryBus, TelemetrySnapshot  # noqa: F401
 
 __all__ = [
     "BandwidthModel",
     "LatencyRecorder",
+    "LatencyWindow",
     "LinkClock",
     "OverlapMeter",
     "PSRequestSource",
@@ -31,6 +34,8 @@ __all__ = [
     "Router",
     "ServingConfig",
     "ServingEngine",
+    "TelemetryBus",
+    "TelemetrySnapshot",
     "ZipfWorkload",
     "prefetch_batches",
 ]

@@ -27,11 +27,29 @@ compute, so ``blocked_s`` vs ``wire_s`` is wall-clock evidence.
 Fault handling composes the existing layers: a ``ChaosSchedule`` kills /
 straggles shards mid-serve; a source link that cannot deliver within its
 ``RetryPolicy`` deadlines is dropped for the step and the worker serves
-from its stale buffer (bounded-staleness fallback) — after the first
-timeout the link is *suspected* and skipped at zero cost until it
-recovers.  With an ``ElasticSession`` attached, kills instead trigger a
-warm repair whose new placement reaches the router through
-``PSCluster.placement_version``.
+from its stale buffer (bounded-staleness fallback).  The per-link
+``CircuitBreaker`` (``runtime.fault``) opens after the first burnt
+budget — the link is skipped at zero cost — and *half-opens* after a
+cooldown: one trial pull probes the link, so a recovered shard returns
+to direct serving without operator intervention.  With an
+``ElasticSession`` attached, kills trigger a warm repair whose new
+placement reaches the router through ``PSCluster.placement_version``.
+
+Closed-loop mode (PR 8) attaches an ``SLOAutoscaler``: the source keeps
+a *virtual clock* — ``vtime`` advances ``service_model_s`` per engine
+slot, and a second, virtual ``LinkClock`` books every pull/push on it —
+so each request has a deterministic modeled latency
+(wire + queue + retry penalty + service time) independent of wall-clock
+jitter.  A ``TelemetryBus`` windows those latencies; every
+``decide_every`` slots the autoscaler reads a snapshot and may grow /
+shrink / repair / rebalance through the elastic session, with each
+committed op followed by ``tau_escalation`` slots of fully-stale serving
+(widened §4.3 staleness while the migration settles).  Under overload
+the engine degrades instead of falling over: ``max_backlog_s`` bounds
+each home's virtual NIC backlog, shedding lowest-weight tenants first
+(the threshold scales with tenant weight) with every drop metered per
+tenant.  Decisions replay bit-identically because nothing they read
+comes from the wall clock.
 """
 from __future__ import annotations
 
@@ -47,10 +65,11 @@ from ..core.jax_partition import _count_dispatch
 from ..ml.dbpg import soft_threshold
 from ..ml.lr import SparseBatch, lr_grad, _margins
 from ..ml.ps import PSCluster
-from ..runtime.fault import RetryPolicy
+from ..runtime.fault import CircuitBreaker, RetryPolicy
 from .latency import BandwidthModel, LatencyRecorder, LinkClock, RequestRecord
 from .prefetch import OverlapMeter
 from .router import Router
+from .telemetry import TelemetryBus
 
 __all__ = ["Request", "ZipfWorkload", "RequestMix", "ServingConfig",
            "PSRequestSource", "ServingEngine"]
@@ -98,6 +117,13 @@ class ServingConfig:
     warmup: int = 3                # requests excluded from the stats
     pad_multiple: int = 2048       # nnz pad bucket (bounds jit variants)
     seed: int = 0
+    # --- closed-loop knobs (PR 8); defaults preserve PR 7 behavior ----
+    service_model_s: float = 2e-3  # virtual-clock arrival interval / slot
+    max_backlog_s: float | None = None  # admission bound (None = off)
+    tau_escalation: int = 0        # fully-stale slots after an elastic op
+    breaker_cooldown_s: float = 0.05    # circuit half-open probe delay
+    breaker_max_cooldown_s: float = 2.0  # decorrelated-jitter backoff cap
+    window_requests: int | None = None  # recorder sliding-window size
 
 
 @dataclasses.dataclass
@@ -134,25 +160,43 @@ class PSRequestSource:
 
     def __init__(self, cluster: PSCluster, mix: RequestMix,
                  config: ServingConfig | None = None, chaos=None,
-                 elastic=None):
+                 elastic=None, autoscaler=None, telemetry=None):
         self.cluster = cluster
         self.mix = mix
         self.config = config if config is not None else ServingConfig()
         self.chaos = chaos
         self.elastic = elastic
+        self.autoscaler = autoscaler
         self.router = Router(cluster)
         self.bw = BandwidthModel(self.config.bandwidth
                                  if self.config.bandwidth is not None
                                  else cluster.bandwidth)
         self.rng = np.random.default_rng(self.config.seed)
-        self.link = LinkClock(cluster.k)
+        self.link = LinkClock(cluster.k)      # wall-clock NIC bookings
+        self.vlink = LinkClock(cluster.k)     # virtual-clock NIC bookings
+        self.vtime = 0.0                      # deterministic request clock
         self.straggle = np.ones(cluster.k, np.float64)
         self.dead: set[int] = set()
         self.suspect: set[int] = set()   # links past their retry budget
+        self.breaker = CircuitBreaker(
+            cluster.k, cooldown_s=self.config.breaker_cooldown_s,
+            max_cooldown_s=self.config.breaker_max_cooldown_s,
+            seed=self.config.seed)
+        self.load_factor = 1.0                # burst batch multiplier
         self.events: list[tuple[int, str, int]] = []
+        self._pending_repairs: set[int] = set()
+        self._tau_until = -1                  # τ-escalation deadline (slot)
+        if autoscaler is not None and telemetry is None:
+            telemetry = TelemetryBus(
+                cluster.k,
+                window_requests=autoscaler.config.window_requests)
+        self.telemetry: TelemetryBus | None = telemetry
 
     # ----------------------------------------------------------- chaos
     def on_step(self, t: int) -> None:
+        # the virtual clock: requests arrive every service_model_s, full
+        # stop — nothing downstream of a decision reads the wall clock
+        self.vtime = t * self.config.service_model_s
         if self.chaos is None:
             return
         for ev in self.chaos.at(t):
@@ -162,20 +206,23 @@ class PSRequestSource:
         k = self.cluster.k
         if ev.kind == "kill":
             m = ev.machine % k
-            if self.elastic is not None:
+            if self.elastic is not None and self.autoscaler is None:
                 # warm repair under load: re-place, re-shard the cluster,
                 # and let the router pick it up via placement_version
-                self.elastic.repair(m)
-                self.elastic.sync_cluster(self.cluster)
+                op = self.elastic.repair(m)
+                self._sync_placement(op)
                 self._sync_fleet()
                 self.dead.discard(m)
                 self.suspect.discard(m)
+                self.breaker.reset(m)
             else:
+                # closed loop (or no elastic): the controller discovers
+                # the loss through its own circuit breaker and repairs
                 self.dead.add(m)
         elif ev.kind == "add":
             if self.elastic is not None:
-                self.elastic.grow_k(force=True)
-                self.elastic.sync_cluster(self.cluster)
+                op = self.elastic.grow_k(force=True)
+                self._sync_placement(op)
                 self._sync_fleet()
         elif ev.kind == "straggle":
             self.straggle[ev.machine % k] = ev.factor
@@ -183,7 +230,11 @@ class PSRequestSource:
             m = ev.machine % k
             self.straggle[m] = 1.0
             self.dead.discard(m)
-            self.suspect.discard(m)
+            # deliberately NOT closing the circuit here: the half-open
+            # probe must rediscover the link — that's the honest path a
+            # real fleet has (nobody tells serving the shard came back)
+        elif ev.kind == "burst":
+            self.load_factor = float(ev.factor)
         self.events.append((t, ev.kind, -1 if ev.machine is None
                             else ev.machine % max(k, 1)))
 
@@ -195,16 +246,48 @@ class PSRequestSource:
         else:
             self.straggle = self.straggle[:k]
         self.link.resize(k)
+        self.vlink.resize(k)
+        self.breaker.resize(k)
+        if self.telemetry is not None:
+            self.telemetry.resize(k)
         self.dead = {m for m in self.dead if m < k}
         self.suspect = {m for m in self.suspect if m < k}
+        self._pending_repairs = {m for m in self._pending_repairs if m < k}
         self.router.refresh(self.cluster)
+
+    def _sync_placement(self, op=None) -> dict:
+        """Push the elastic placement into the cluster *preserving* weight
+        ownership: ``ElasticSession.sync_cluster``'s default re-stripes
+        ``parts_v`` round-robin, which would destroy the feature locality
+        the partitioner bought.  Instead the current owners are remapped
+        per op — shrink retires machine ``op.partner`` into ``op.machine``;
+        grow moves the features the split handed to the new machine
+        (present in its packed mask, absent from the shrunk source's)."""
+        cluster = self.cluster
+        owner = cluster.owner.copy().astype(np.int32)
+        if op is not None and getattr(op, "committed", False):
+            if op.kind == "shrink" and op.partner >= 0:
+                j = op.partner
+                owner[owner == j] = op.machine
+                owner[owner > j] -= 1
+            elif op.kind == "grow" and op.partner >= 0:
+                from ..kernels.parsa_cost import unpack_bitmask
+                masks = self.elastic.stream.arena.masks_np(logical=False)
+                num_v = cluster.graph.num_v
+                pair = unpack_bitmask(
+                    masks[[op.machine, op.partner]], num_v)
+                move = (owner == op.machine) & pair[1] & ~pair[0]
+                owner[move] = op.partner
+        owner = np.minimum(owner, self.elastic.k - 1)
+        return self.elastic.sync_cluster(cluster, parts_v=owner)
 
     # -------------------------------------------------------- requests
     def next_request(self, t: int) -> Request:
         self.router.refresh(self.cluster)
         wl = self.mix.sample(self.rng)
         home = self.router.next_home(self.dead)
-        rows = self.router.sample_rows(home, wl.batch, self.rng,
+        batch_size = max(1, int(round(wl.batch * self.load_factor)))
+        rows = self.router.sample_rows(home, batch_size, self.rng,
                                        zipf_s=wl.zipf_s,
                                        hot_offset=wl.hot_offset)
         g = self.cluster.graph
@@ -219,6 +302,26 @@ class PSRequestSource:
         return Request(tenant=wl.name, home=home, rows=rows, batch=batch,
                        need=need, examples=rows.size, tokens=nnz)
 
+    # ------------------------------------------------------- admission
+    def admit(self, req: Request) -> bool:
+        """Bounded per-home queue: shed when the home's *virtual* NIC
+        backlog exceeds ``max_backlog_s`` scaled by the tenant's relative
+        weight — so as backlog climbs, the lowest-weight tenants are shed
+        first and the heaviest tenant holds out to the full bound.
+        Decided AFTER ``next_request`` so RNG consumption is identical
+        with and without shedding (determinism contract)."""
+        limit = self.config.max_backlog_s
+        if limit is None:
+            return True
+        weights = {wl.name: wl.weight for wl in self.mix.workloads}
+        wmax = max(weights.values())
+        scaled = limit * weights.get(req.tenant, wmax) / wmax
+        return self.vlink.backlog(req.home, self.vtime) <= scaled
+
+    def note_shed(self, req: Request) -> None:
+        if self.telemetry is not None:
+            self.telemetry.observe_shed(req.tenant)
+
     def issue(self, req: Request, t: int):
         """Price and issue the request's pull; returns a ``PullHandle``."""
         plan = self.cluster.plan_pull(req.home, need=req.need)
@@ -226,31 +329,125 @@ class PSRequestSource:
         retry = self.config.retry
         exclude: set[int] = set()
         penalty = 0.0   # timeout clocks run concurrently with the wire
+        vnow = self.vtime
+        src_times = np.full(self.cluster.k, np.nan)
+        escalated = t < self._tau_until
         for j in np.flatnonzero(plan.src_bytes):
             j = int(j)
             if j == req.home:
                 continue
-            if j in self.suspect:
+            if escalated:
+                # widened bounded staleness while a repair/migration is
+                # in flight: serve fully stale, burn no retry budgets
+                exclude.add(j)
+                continue
+            if not self.breaker.allow(j, vnow):
                 exclude.add(j)       # circuit open: skip at zero cost
                 continue
             link_s = float("inf") if j in self.dead else float(secs[j])
             delivered, spent = retry.admit(link_s)
             penalty = max(penalty, spent)
-            if not delivered:
+            newly_opened = self.breaker.record(j, delivered, vnow)
+            if delivered:
+                self.suspect.discard(j)
+                if plan.src_bytes[j] > 0:
+                    # observed delivery slowdown vs the bytes/bandwidth
+                    # baseline — the telemetry EWMA's straggle evidence
+                    src_times[j] = (secs[j] * self.bw.bandwidth
+                                    / float(plan.src_bytes[j]))
+            else:
                 # retry budget exhausted: bounded-staleness fallback —
                 # this source's entries stay stale in the buffer
                 exclude.add(j)
                 self.suspect.add(j)
-        now = time.perf_counter()
+                if newly_opened and self.autoscaler is not None:
+                    # repair cue: the closed loop replaces the shard at
+                    # the end of this slot instead of waiting for an op
+                    self._pending_repairs.add(j)
         wire = self.bw.ingress_seconds(plan.src_bytes, req.home,
                                        self.straggle, exclude)
-        # the home NIC serializes transfers: a still-draining push (or a
-        # previous pull) pushes this transfer's completion out
+        # deterministic queueing: the virtual link clock accumulates the
+        # modeled backlog the autoscaler and admission control act on
+        vdone = self.vlink.acquire(req.home, vnow, wire)
+        vqueue = vdone - vnow - wire
+        # wall-clock booking mirrors it: a still-draining push (or a
+        # previous pull) pushes this transfer's completion out for real
+        now = time.perf_counter()
         done = self.link.acquire(req.home, now, wire)
         _count_dispatch("serving_pull")
-        return self.cluster.pull_nowait(plan, frozenset(exclude),
-                                        wire_s=done - now, wait_s=penalty)
+        handle = self.cluster.pull_nowait(plan, frozenset(exclude),
+                                          wire_s=wire, wait_s=penalty,
+                                          queue_s=done - now - wire)
+        handle.modeled_s = (wire + penalty + vqueue
+                            + self.config.service_model_s)
+        handle.vqueue_s = vqueue
+        handle._src_times = src_times
+        return handle
 
+    def observe_request(self, req: Request, handle, modeled_s: float,
+                        measured_s: float) -> None:
+        if self.telemetry is None:
+            return
+        self.telemetry.observe(modeled_s, measured_s,
+                               getattr(handle, "_src_times", None))
+
+    # ------------------------------------------------------ closed loop
+    def _snapshot(self, t: int):
+        k = self.cluster.k
+        return self.telemetry.snapshot(
+            step=t,
+            occupancy=[self.vlink.backlog(m, self.vtime)
+                       for m in range(k)],
+            footprint=self.cluster.need.sum(axis=1),
+            sizes=[r.size for r in self.cluster.rows],
+            open_circuits=self.breaker.open_links(),
+            load_factor=self.load_factor)
+
+    def _commit_op(self, op, t: int) -> None:
+        self._sync_placement(op)
+        self._sync_fleet()
+        self._tau_until = t + 1 + self.config.tau_escalation
+
+    def after_slot(self, t: int) -> None:
+        """End-of-slot hook: immediate repair on circuit-open, then (every
+        ``decide_every`` slots) one autoscaler decision."""
+        if (self.elastic is not None and self.telemetry is not None
+                and self._pending_repairs):
+            for m in sorted(self._pending_repairs):
+                if m >= self.cluster.k or m not in self.dead:
+                    continue
+                snap = self._snapshot(t)
+                op = self.elastic.repair(m)
+                op.telemetry = snap
+                self._commit_op(op, t)
+                self.breaker.reset(m)
+                self.suspect.discard(m)
+                self.dead.discard(m)
+                if self.autoscaler is not None:
+                    self.autoscaler.note_repair(snap, m)
+            self._pending_repairs.clear()
+        if self.autoscaler is None or self.telemetry is None:
+            return
+        if (t + 1) % self.autoscaler.config.decide_every:
+            return
+        snap = self._snapshot(t)
+        decision = self.autoscaler.decide(snap)
+        if decision.action == "grow" and self.elastic is not None:
+            self.autoscaler.approve("grow")
+            op = self.elastic.grow_k(target=decision.target)
+            op.telemetry = snap
+            if op.committed:
+                self._commit_op(op, t)
+        elif decision.action == "shrink" and self.elastic is not None:
+            self.autoscaler.approve("shrink")
+            op = self.elastic.shrink_k()
+            op.telemetry = snap
+            if op.committed:
+                self._commit_op(op, t)
+        elif decision.action == "rebalance":
+            self.router.set_weights(np.asarray(snap.speeds))
+
+    # --------------------------------------------------------- serving
     def compute(self, req: Request, payload: jax.Array):
         cfg = self.cluster.cfg
         _count_dispatch("serving_compute")
@@ -260,6 +457,14 @@ class PSRequestSource:
 
     def commit(self, req: Request, out, t: int) -> dict:
         new_w, g, loss = out
+        if req.home >= self.cluster.k:
+            # the home machine retired mid-flight (an elastic shrink
+            # landed between issue and commit): the weight update still
+            # applies, but there is no NIC left to meter the push on
+            if self.config.update:
+                self.cluster.commit_weights(new_w)
+            return {"loss": float(loss), "push_inner_bytes": 0,
+                    "push_inter_bytes": 0, "push_wire_s": 0.0}
         mask = req.need & (np.asarray(g) != 0)
         push = self.cluster.meter_push(req.home, mask)
         # push is fire-and-forget (the τ model absorbs its latency) but
@@ -269,6 +474,7 @@ class PSRequestSource:
                      * float(self.straggle[req.home]))
         if push_wire > 0:
             self.link.acquire(req.home, time.perf_counter(), push_wire)
+            self.vlink.acquire(req.home, self.vtime, push_wire)
         if self.config.update:
             self.cluster.commit_weights(new_w)
         return {"loss": float(loss),
@@ -279,7 +485,9 @@ class PSRequestSource:
 
 class ServingEngine:
     """The event loop: sync (pull → compute → push per request) or async
-    (double-buffered — issue pull t+1, then block on pull t)."""
+    (double-buffered — issue pull t+1, then block on pull t).  Slots the
+    admission controller sheds are served as no-ops: the virtual clock
+    still advances, so a shed burst drains the backlog it was shed for."""
 
     def __init__(self, source, prefetch: bool | None = None,
                  warmup: int | None = None):
@@ -289,41 +497,55 @@ class ServingEngine:
                          else bool(prefetch))
         self.warmup = (src_cfg.warmup if warmup is None and src_cfg
                        else int(warmup or 0))
-        self.recorder = LatencyRecorder()
+        self.recorder = LatencyRecorder(
+            window_requests=getattr(src_cfg, "window_requests", None))
         self.overlap = OverlapMeter()
+
+    def _produce(self, t):
+        """Generate + admit + issue slot ``t``; ``None`` when shed."""
+        src = self.source
+        src.on_step(t)
+        req = src.next_request(t)
+        admit = getattr(src, "admit", None)
+        if admit is not None and not admit(req):
+            self.recorder.add_shed(req.tenant)
+            note = getattr(src, "note_shed", None)
+            if note is not None:
+                note(req)
+            return None
+        return (req, src.issue(req, t))
 
     def run(self, num_requests: int) -> dict:
         rec, meter = self.recorder, self.overlap
         src = self.source
+        after = getattr(src, "after_slot", None)
         wall0 = None
         if self.prefetch:
-            src.on_step(0)
-            cur = None
-            if num_requests > 0:
-                req0 = src.next_request(0)
-                cur = (req0, src.issue(req0, 0))
+            cur = self._produce(0) if num_requests > 0 else None
             for t in range(num_requests):
-                req, handle = cur
                 if t == self.warmup:
                     wall0 = time.perf_counter()
-                nxt = None
-                if t + 1 < num_requests:
-                    # double buffer: issue pull t+1 BEFORE blocking on
-                    # pull t — its wire time ticks behind this step's
-                    # compute; the view it returns is ≤ 1 commit stale
-                    src.on_step(t + 1)
-                    nreq = src.next_request(t + 1)
-                    nxt = (nreq, src.issue(nreq, t + 1))
-                self._serve_one(req, handle, t, rec, meter)
+                # double buffer: issue pull t+1 BEFORE blocking on
+                # pull t — its wire time ticks behind this step's
+                # compute; the view it returns is ≤ 1 commit stale
+                nxt = (self._produce(t + 1)
+                       if t + 1 < num_requests else None)
+                if cur is not None:
+                    req, handle = cur
+                    self._serve_one(req, handle, t, rec, meter)
+                if after is not None:
+                    after(t)
                 cur = nxt
         else:
             for t in range(num_requests):
                 if t == self.warmup:
                     wall0 = time.perf_counter()
-                src.on_step(t)
-                req = src.next_request(t)
-                handle = src.issue(req, t)
-                self._serve_one(req, handle, t, rec, meter)
+                cur = self._produce(t)
+                if cur is not None:
+                    req, handle = cur
+                    self._serve_one(req, handle, t, rec, meter)
+                if after is not None:
+                    after(t)
         wall_s = (time.perf_counter() - wall0) if wall0 is not None else 0.0
         out = rec.summary(wall_s=wall_s)
         out["mode"] = "async" if self.prefetch else "sync"
@@ -341,16 +563,25 @@ class ServingEngine:
         compute = time.perf_counter() - tc
         stats = src.commit(req, out, t)
         end = time.perf_counter()
+        queue = getattr(handle, "queue_s", 0.0)
+        measured = end - handle.issued_at
+        modeled = getattr(handle, "modeled_s",
+                          handle.wire_s + handle.wait_s + queue)
         rec.add(RequestRecord(
             tenant=req.tenant, step=t, home=req.home,
             examples=req.examples, tokens=req.tokens,
-            latency_s=end - handle.issued_at,
+            latency_s=measured,
             wire_s=handle.wire_s, wait_s=handle.wait_s,
             blocked_s=blocked, compute_s=compute,
             fresh_entries=handle.fresh_entries,
             stale_entries=handle.stale_entries,
             pull_inter_bytes=handle.inter_bytes,
             push_inter_bytes=stats.get("push_inter_bytes", 0),
-            warmup=t < self.warmup))
+            warmup=t < self.warmup,
+            queue_s=queue, modeled_s=modeled))
+        observe = getattr(src, "observe_request", None)
+        if observe is not None:
+            observe(req, handle, modeled, measured)
         if t >= self.warmup:
-            meter.add(handle.wire_s, handle.wait_s, blocked, compute)
+            meter.add(handle.wire_s + queue, handle.wait_s, blocked,
+                      compute)

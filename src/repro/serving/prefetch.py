@@ -68,6 +68,7 @@ class ReadyHandle:
     payload: object
     wire_s: float = 0.0
     wait_s: float = 0.0
+    queue_s: float = 0.0
     inner_bytes: int = 0
     inter_bytes: int = 0
     fresh_entries: int = 0

@@ -31,6 +31,8 @@ class Router:
         self.k = 0
         self._rr = 0
         self._zipf_cache: dict[tuple[int, float], np.ndarray] = {}
+        self.weights: np.ndarray | None = None
+        self._swrr: np.ndarray | None = None
         self.refresh(cluster)
 
     def refresh(self, cluster) -> bool:
@@ -38,22 +40,54 @@ class Router:
         anything changed."""
         if cluster.placement_version == self.version:
             return False
+        if cluster.k != self.k:
+            # elastic resize: routing weights are stale for the new fleet;
+            # fall back to plain round-robin until the controller re-sets
+            self.weights = None
+            self._swrr = None
         self.version = cluster.placement_version
         self.k = cluster.k
         self.pools = [np.asarray(rows) for rows in cluster.rows]
         return True
+
+    def set_weights(self, weights) -> None:
+        """Bias ``next_home`` toward fast machines (straggler-aware
+        routing): per-machine weights consumed by a smooth weighted
+        round-robin.  ``None`` restores plain round-robin."""
+        if weights is None:
+            self.weights = None
+            self._swrr = None
+            return
+        w = np.asarray(weights, np.float64)
+        if w.shape != (self.k,):
+            raise ValueError(
+                f"weights must have shape ({self.k},), got {w.shape}")
+        if (w <= 0).any():
+            raise ValueError("weights must be > 0")
+        self.weights = w
+        self._swrr = np.zeros(self.k, np.float64)
 
     def live(self, dead=()) -> list[int]:
         return [m for m in range(self.k)
                 if m not in dead and self.pools[m].size > 0]
 
     def next_home(self, dead=()) -> int:
-        """Round-robin over live machines with non-empty pools."""
+        """Round-robin over live machines with non-empty pools; smooth
+        *weighted* round-robin when ``set_weights`` biased the fleet
+        (deterministic: no RNG, ties break to the lowest machine id)."""
         live = self.live(dead)
         if not live:
             raise RuntimeError("no live machine with examples to serve")
-        home = live[self._rr % len(live)]
-        self._rr += 1
+        if self.weights is None:
+            home = live[self._rr % len(live)]
+            self._rr += 1
+            return home
+        # smooth WRR (nginx scheme): credit each live machine its weight,
+        # serve the richest, debit it the round's total credit
+        idx = np.array(live)
+        self._swrr[idx] += self.weights[idx]
+        home = int(idx[np.argmax(self._swrr[idx])])
+        self._swrr[home] -= float(self.weights[idx].sum())
         return home
 
     def _zipf_p(self, n: int, s: float) -> np.ndarray:

@@ -1,0 +1,588 @@
+"""PR 8 closed loop: sliding-window telemetry, circuit half-open probes,
+admission control, the SLO autoscaler's decision logic, and chaos
+composition through the serving engine — including bit-identical replay.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (ChaosEvent, ChaosSchedule, ElasticConfig,
+                       ElasticSession, ParsaConfig, ParsaStreamConfig)
+from repro.core import random_parts
+from repro.core.jax_partition import dispatch_counter
+from repro.elastic import AutoscaleDecision, SLOAutoscaler, SLOConfig
+from repro.elastic.policy import FleetState
+from repro.graphs import ctr_like, ctr_like_stream
+from repro.ml import DBPGConfig, PSCluster
+from repro.runtime import CircuitBreaker, RetryPolicy
+from repro.serving import (LatencyRecorder, LatencyWindow, PSRequestSource,
+                           RequestMix, Router, ServingConfig, ServingEngine,
+                           TelemetryBus, ZipfWorkload)
+from repro.serving.latency import RequestRecord
+
+K = 4
+
+
+# -------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def serving_graph():
+    g = ctr_like(600, 1200, nnz_per_row=12, clusters=8, locality=0.85,
+                 seed=0)
+    labels = np.where(np.random.default_rng(0).random(g.num_u) < 0.5,
+                      1.0, -1.0).astype(np.float32)
+    return g, labels
+
+
+def _mix():
+    return RequestMix((
+        ZipfWorkload("heavy", batch=24, zipf_s=1.1, weight=3.0),
+        ZipfWorkload("light", batch=16, zipf_s=1.3, hot_offset=7,
+                     weight=1.0),
+    ))
+
+
+def _session(g, k=K):
+    scfg = ParsaStreamConfig(base=ParsaConfig(
+        k=k, backend="device_scan", refine_v=False, seed=0))
+    sess = ElasticSession(ElasticConfig(stream=scfg, min_k=2, max_k=k + 4),
+                          num_v=g.num_v)
+    sess.feed(g)
+    return sess
+
+
+def _cluster(g, labels, parts_u=None, bandwidth=2.5e5, k=K):
+    if parts_u is None:
+        parts_u = random_parts(g.num_u, k, 0)
+    dcfg = DBPGConfig(lam=0.05, lr=0.1, kkt_eps=0.0, compress=False,
+                      error_feedback=False)
+    cl = PSCluster(g, labels, parts_u, random_parts(g.num_v, k, 1), k,
+                   dcfg, bandwidth=bandwidth)
+    cl.commit_weights(np.random.default_rng(1).normal(
+        0, 0.1, g.num_v).astype(np.float32))
+    return cl
+
+
+def _closed_loop(g, labels, slo_cfg, chaos=None, bandwidth=2.5e5,
+                 max_backlog_s=None, tau_escalation=0,
+                 retry=None, seed=0):
+    """A full closed-loop stack: autoscaler-owned ElasticSession feeding a
+    PSRequestSource whose placement matches the session's."""
+    asc = SLOAutoscaler(slo_cfg)
+    scfg = ParsaStreamConfig(base=ParsaConfig(
+        k=K, backend="device_scan", refine_v=False, seed=0))
+    sess = ElasticSession(
+        ElasticConfig(stream=scfg, min_k=slo_cfg.min_k,
+                      max_k=slo_cfg.max_k),
+        num_v=g.num_v, policy=asc)
+    sess.feed(g)
+    cluster = _cluster(g, labels, parts_u=sess.parts.copy(),
+                       bandwidth=bandwidth)
+    cfg = ServingConfig(
+        prefetch=True, warmup=2, seed=seed, pad_multiple=512,
+        retry=retry if retry is not None else RetryPolicy(
+            timeout_s=0.004, retries=0),
+        service_model_s=2e-3, max_backlog_s=max_backlog_s,
+        tau_escalation=tau_escalation,
+        window_requests=slo_cfg.window_requests)
+    src = PSRequestSource(cluster, _mix(), cfg, chaos=chaos, elastic=sess,
+                          autoscaler=asc)
+    return ServingEngine(src), src, sess, asc
+
+
+# --------------------------------------------------- LatencyWindow (ring)
+def test_latency_window_cold_start_never_reads_zeros():
+    w = LatencyWindow(8)
+    assert w.filled == 0 and w.percentile(99) == 0.0 and w.mean() == 0.0
+    w.add(10.0)
+    # one observation: every percentile reduces over [10.0], not the
+    # preallocated zeros (the DriftTracker lazy-seeding fix)
+    assert w.percentile(1) == 10.0 and w.percentile(99) == 10.0
+    assert w.mean() == 10.0 and w.filled == 1
+    w.add(30.0)
+    assert w.percentile(50) == 20.0 and w.filled == 2
+
+
+def test_latency_window_wraparound_overwrites_oldest():
+    w = LatencyWindow(4)
+    for v in (1.0, 2.0, 3.0, 4.0, 100.0, 200.0):
+        w.add(v)
+    assert w.filled == 4 and w.total_observed == 6
+    assert set(w.values()) == {3.0, 4.0, 100.0, 200.0}
+    w.reset()
+    assert w.filled == 0 and w.percentile(99) == 0.0
+    w.add(7.0)
+    assert w.values().tolist() == [7.0]
+    with pytest.raises(ValueError):
+        LatencyWindow(0)
+
+
+def test_recorder_sliding_window_tracks_recent_not_alltime():
+    rec = LatencyRecorder(window_requests=4)
+
+    def add(step, lat, warm=False):
+        rec.add(RequestRecord(
+            tenant="t", step=step, home=0, examples=1, tokens=1,
+            latency_s=lat, wire_s=lat, wait_s=0.0, blocked_s=0.0,
+            compute_s=0.0, warmup=warm))
+
+    add(0, 9.9, warm=True)                 # warmup: not in the window
+    for i in range(4):
+        add(i + 1, 1.0)
+    for i in range(4):
+        add(i + 5, 0.001)                  # burst long gone
+    w = rec.windowed()
+    assert w["requests"] == 4
+    assert w["p99_ms"] == pytest.approx(1.0)   # window forgot the 1s burst
+    s = rec.summary(wall_s=1.0)
+    assert s["p99_window_ms"] == pytest.approx(1.0)
+    assert s["p99_ms"] > 100                   # all-time p99 never recovers
+    assert LatencyRecorder(window_requests=None)._win is None
+    with pytest.raises(ValueError):
+        LatencyRecorder().windowed()
+
+
+# ----------------------------------------------- circuit half-open probe
+def test_breaker_half_open_probe_closes_on_recovery():
+    b = CircuitBreaker(2, cooldown_s=0.1, max_cooldown_s=1.0, seed=0)
+    assert b.allow(1, now=0.0) and b.state(1) == "closed"
+    assert b.record(1, delivered=False, now=0.0)      # newly opened
+    assert b.state(1) == "open" and b.open_links() == (1,)
+    assert not b.allow(1, now=0.05)                   # cooling down
+    assert b.allow(1, now=0.11)                       # half-open probe
+    assert b.state(1) == "half_open"
+    assert not b.record(1, delivered=True, now=0.11)  # probe succeeded
+    assert b.state(1) == "closed" and b.open_links() == ()
+
+
+def test_breaker_failed_probe_backs_off_with_decorrelated_jitter():
+    b = CircuitBreaker(1, cooldown_s=0.1, max_cooldown_s=0.5, seed=3)
+    b.record(0, delivered=False, now=0.0)
+    sleeps = []
+    now = 0.0
+    for _ in range(6):
+        now = float(b._until[0])
+        assert b.allow(0, now=now)                    # probe admitted
+        b.record(0, delivered=False, now=now)         # still dead
+        sleeps.append(float(b._sleep[0]))
+    # every cooldown drawn from U(base, 3 x prev), capped
+    assert all(0.1 <= s <= 0.5 for s in sleeps)
+    assert len(set(sleeps)) > 1                       # jittered, not fixed
+    # deterministic: same seed, same probe outcomes -> same draws
+    b2 = CircuitBreaker(1, cooldown_s=0.1, max_cooldown_s=0.5, seed=3)
+    b2.record(0, delivered=False, now=0.0)
+    replay = []
+    for _ in range(6):
+        n2 = float(b2._until[0])
+        b2.allow(0, now=n2)
+        b2.record(0, delivered=False, now=n2)
+        replay.append(float(b2._sleep[0]))
+    assert replay == sleeps
+    b.reset(0)
+    assert b.state(0) == "closed" and b._sleep[0] == 0.1
+
+
+def test_kill_then_recover_returns_to_direct_serving(serving_graph):
+    """Regression (PR 7 suspect set): a killed-then-recovered shard used to
+    stay suspect forever.  The half-open probe must rediscover the link —
+    nobody tells serving the shard came back."""
+    g, labels = serving_graph
+    chaos = ChaosSchedule([
+        ChaosEvent(feed=3, kind="kill", machine=1),
+        ChaosEvent(feed=8, kind="recover", machine=1),
+    ], seed=0)
+    cluster = _cluster(g, labels)
+    cfg = ServingConfig(prefetch=True, warmup=2, seed=0, pad_multiple=512,
+                        retry=RetryPolicy(timeout_s=0.002, retries=1),
+                        breaker_cooldown_s=0.004,   # 2 virtual slots
+                        service_model_s=2e-3)
+    src = PSRequestSource(cluster, _mix(), cfg, chaos=chaos)
+    engine = ServingEngine(src)
+    s = engine.run(24)
+    assert (3, "kill", 1) in src.events and (8, "recover", 1) in src.events
+    # the probe rediscovered the link: circuit closed, suspect cleared
+    assert src.breaker.state(1) == "closed"
+    assert 1 not in src.suspect and src.dead == set()
+    assert s["stale_entries"] > 0            # the dead stretch served stale
+    # after recovery the link delivers fresh entries again
+    tail = [r for r in engine.recorder.records if r.step >= 16]
+    assert all(r.stale_entries == 0 for r in tail)
+
+
+# ------------------------------------------------------ admission control
+def test_admission_sheds_lowest_weight_tenant_first(serving_graph):
+    g, labels = serving_graph
+    cluster = _cluster(g, labels)
+    cfg = ServingConfig(prefetch=True, warmup=0, seed=0, pad_multiple=512,
+                        service_model_s=2e-3, max_backlog_s=0.03)
+    src = PSRequestSource(cluster, _mix(), cfg)
+    src.vtime = 0.0
+    heavy = src.next_request(0)
+    light_wl = src.mix.workloads[1]
+    # between the light tenant's scaled bound (0.03/3) and the heavy
+    # tenant's full bound: light sheds, heavy holds out
+    src.vlink.free_at[:] = 0.02
+    light = heavy
+    while light.tenant != "light" or heavy.tenant != "heavy":
+        r = src.next_request(0)
+        if r.tenant == "light":
+            light = r
+        else:
+            heavy = r
+    assert src.admit(heavy) and not src.admit(light)
+    src.vlink.free_at[:] = 0.05              # past the full bound
+    assert not src.admit(heavy)
+    src.vlink.free_at[:] = 0.0
+    assert src.admit(light) and src.admit(heavy)
+    assert src.admit(light) is True          # no bound consumed by admits
+
+
+def test_shed_slots_advance_the_virtual_clock(serving_graph):
+    """A shed burst must drain the backlog it was shed for: shed slots are
+    no-ops but the virtual clock still ticks, and every drop is metered
+    against its tenant."""
+    g, labels = serving_graph
+    cluster = _cluster(g, labels, bandwidth=4e4)    # slow wire: backlog
+    cfg = ServingConfig(prefetch=True, warmup=2, seed=0, pad_multiple=512,
+                        service_model_s=1e-3, max_backlog_s=0.004,
+                        window_requests=16)
+    src = PSRequestSource(cluster, _mix(), cfg,
+                          telemetry=TelemetryBus(K, window_requests=16))
+    engine = ServingEngine(src)
+    n = 40
+    s = engine.run(n)
+    assert s["shed_requests"] > 0
+    assert s["requests"] + s["shed_requests"] == n - 2  # nothing lost
+    assert s["shed_per_tenant"] == src.telemetry.shed
+    assert src.telemetry.shed.get("light", 0) >= 1
+    assert src.vtime == pytest.approx((n - 1) * 1e-3)   # clock never skips
+    assert 0.0 < s["shed_frac"] < 1.0
+
+
+# ---------------------------------------------------------- telemetry bus
+def test_telemetry_bus_windows_and_snapshot_equality():
+    bus = TelemetryBus(3, window_requests=8)
+    for i in range(10):
+        bus.observe(0.005 + i * 1e-4, 0.009,
+                    src_times=np.array([1.0, 2.0, np.nan]))
+    snap = bus.snapshot(step=9, occupancy=[0.1, 0.0, 0.2],
+                        footprint=[10, 30, 20], sizes=[5, 5, 5],
+                        open_circuits=(1,), load_factor=2.0)
+    assert snap.window == 8 and snap.served == 10
+    assert snap.p99_ms > snap.p50_ms > 0
+    assert snap.max_occupancy == pytest.approx(0.2)
+    assert snap.hot_part == 1                      # largest footprint
+    assert snap.open_circuits == (1,)
+    # straggler EWMA saw machine 1 at 2x machine 0's delivery time
+    assert snap.speeds[1] < snap.speeds[0]
+    # snapshots are tuples all the way down: equal by value
+    snap2 = bus.snapshot(step=9, occupancy=[0.1, 0.0, 0.2],
+                         footprint=[10, 30, 20], sizes=[5, 5, 5],
+                         open_circuits=(1,), load_factor=2.0)
+    assert snap == snap2
+    with pytest.raises(ValueError):
+        TelemetryBus(3, window_requests=0)
+
+
+def test_telemetry_bus_resize_preserves_survivor_ewma():
+    bus = TelemetryBus(3, window_requests=4)
+    for _ in range(6):
+        bus.observe(1e-3, 1e-3, src_times=np.array([1.0, 4.0, 1.0]))
+    slow = bus.ewma.weights()[1]
+    assert slow < 1.0
+    bus.resize(4)                                  # grow: survivor history
+    assert bus.k == 4
+    assert bus.ewma.weights()[1] == pytest.approx(slow, rel=0.2)
+    bus.observe(1e-3, 1e-3, src_times=np.array([1.0, 4.0, 1.0]))  # short
+    bus.resize(2)                                  # shrink
+    assert bus.ewma.weights().shape == (2,)
+    bus.resize(2)                                  # no-op
+    assert bus.k == 2
+
+
+def test_hot_part_skips_unsplittable_parts():
+    bus = TelemetryBus(3, window_requests=4)
+    snap = bus.snapshot(step=0, occupancy=[0.0] * 3,
+                        footprint=[50, 40, 10], sizes=[1, 8, 8])
+    assert snap.hot_part == 1                      # part 0 has 1 row only
+
+
+# ------------------------------------------------- autoscaler unit logic
+def _snap(bus_k=4, p99=10.0, occ=0.0, k=4, speeds=None, window=8,
+          sizes=None):
+    bus = TelemetryBus(bus_k, window_requests=8)
+    for _ in range(window):
+        bus.observe(p99 * 1e-3, p99 * 1e-3)
+    if speeds is not None:
+        bus.ewma._ewma[:] = 0.0                   # neutral
+        snap = bus.snapshot(0, [occ] * k, [10] * k,
+                            sizes if sizes is not None else [8] * k)
+        return snap.__class__(**{**snap.__dict__, "speeds": speeds, "k": k})
+    snap = bus.snapshot(0, [occ] * k, [10] * k,
+                        sizes if sizes is not None else [8] * k)
+    return snap.__class__(**{**snap.__dict__, "k": k})
+
+
+def _slo_cfg(**kw):
+    base = dict(slo_ms=20.0, window_requests=8, decide_every=4,
+                warmup_windows=1, patience=2, shrink_patience=2,
+                cooldown_windows=1, shrink_p99_frac=0.4,
+                shrink_occupancy_s=0.01, min_k=2, max_k=6,
+                drift_ratio=2.0)
+    base.update(kw)
+    return SLOConfig(**base)
+
+
+def test_autoscaler_patience_then_grow_targets_hot_part():
+    asc = SLOAutoscaler(_slo_cfg())
+    assert asc.decide(_snap(p99=30.0)).reason == "warmup"
+    assert asc.decide(_snap(p99=30.0)).action == "hold"    # 1 hot window
+    d = asc.decide(_snap(p99=30.0))
+    assert d.action == "grow" and d.reason.startswith("p99")
+    assert d.target == 0                                   # hot footprint
+    assert asc.decide(_snap(p99=30.0)).reason == "cooldown"
+    assert len(asc.decisions) == 4
+    # an under-SLO window resets the hot streak
+    assert asc.decide(_snap(p99=30.0)).action == "hold"
+    assert asc.decide(_snap(p99=10.0, occ=1.0)).action == "hold"
+    assert asc.decide(_snap(p99=30.0)).action == "hold"
+    assert asc.decide(_snap(p99=30.0)).action == "grow"
+
+
+def test_autoscaler_shrink_needs_cold_p99_and_idle_nics():
+    asc = SLOAutoscaler(_slo_cfg(warmup_windows=0, cooldown_windows=0))
+    assert asc.decide(_snap(p99=5.0, occ=0.0)).action == "hold"
+    assert asc.decide(_snap(p99=5.0, occ=0.0)).action == "shrink"
+    # busy NICs block the cold count even with a cold p99
+    asc2 = SLOAutoscaler(_slo_cfg(warmup_windows=0))
+    asc2.decide(_snap(p99=5.0, occ=0.5))
+    asc2.decide(_snap(p99=5.0, occ=0.5))
+    assert all(d.action == "hold" for _, d in asc2.decisions)
+
+
+def test_autoscaler_respects_k_bounds():
+    asc = SLOAutoscaler(_slo_cfg(warmup_windows=0, patience=1, max_k=4))
+    assert asc.decide(_snap(p99=30.0, k=4)).action == "hold"  # at max_k
+    asc2 = SLOAutoscaler(_slo_cfg(warmup_windows=0, shrink_patience=1,
+                                  min_k=4))
+    assert asc2.decide(_snap(p99=1.0, k=4)).action == "hold"  # at min_k
+
+
+def test_autoscaler_rebalance_on_ewma_drift():
+    asc = SLOAutoscaler(_slo_cfg(warmup_windows=0))
+    d = asc.decide(_snap(p99=10.0, speeds=(1.2, 1.2, 1.2, 0.4)))
+    assert d.action == "rebalance" and "0.40x" in d.reason
+    # drift within ratio: plain hold
+    d2 = asc.decide(_snap(p99=10.0, speeds=(1.1, 1.0, 1.0, 0.9)))
+    assert d2.action == "hold"
+
+
+def test_autoscaler_single_shot_consent():
+    asc = SLOAutoscaler(_slo_cfg())
+    state = FleetState(k=4, feed_index=0, sizes=np.full(4, 8),
+                       footprint=np.full(4, 10))
+    assert not asc.grow(state)               # nothing armed: refused
+    asc.approve("grow")
+    assert asc.grow(state)                   # armed: consumed
+    assert not asc.grow(state)               # single shot
+    asc.approve("shrink")
+    assert not asc.grow(state)               # wrong action armed
+    assert asc.shrink(state)
+    asc.approve("grow")
+    assert not asc.grow(FleetState(k=6, feed_index=0, sizes=np.full(6, 8),
+                                   footprint=np.full(6, 10)))  # at max_k
+    assert asc.repair(state) == "warm"
+    with pytest.raises(ValueError):
+        asc.approve("repair")
+
+
+def test_autoscaler_note_repair_holds_cooldown():
+    asc = SLOAutoscaler(_slo_cfg(warmup_windows=0, patience=1))
+    asc.note_repair(_snap(), machine=2)
+    assert asc.repairs[0][1] == 2
+    assert asc.decide(_snap(p99=30.0)).reason == "cooldown"
+    assert asc.decide(_snap(p99=30.0)).action == "grow"
+
+
+def test_slo_config_validation():
+    for bad in (dict(slo_ms=0.0), dict(decide_every=0), dict(patience=0),
+                dict(shrink_patience=0), dict(min_k=5, max_k=4),
+                dict(shrink_p99_frac=1.0), dict(drift_ratio=1.0)):
+        with pytest.raises(ValueError):
+            _slo_cfg(**bad)
+
+
+# --------------------------------------- chaos composition (closed loop)
+def test_closed_loop_repair_on_kill(serving_graph):
+    """Kill with the autoscaler attached: the loop discovers the loss via
+    its own breaker, repairs at end-of-slot, resets the circuit, and logs
+    the repair with its triggering telemetry snapshot."""
+    g, labels = serving_graph
+    chaos = ChaosSchedule([ChaosEvent(feed=4, kind="kill", machine=2)],
+                          seed=0)
+    cfg = _slo_cfg(slo_ms=500.0, decide_every=8, warmup_windows=1)
+    engine, src, sess, asc = _closed_loop(g, labels, cfg, chaos=chaos)
+    v0 = src.cluster.placement_version
+    with dispatch_counter() as counts:
+        s = engine.run(16)
+    assert src.dead == set() and 2 not in src.suspect
+    assert src.breaker.state(2) == "closed"
+    repairs = [op for op in sess.ops if op.kind == "repair"]
+    assert len(repairs) == 1 and repairs[0].committed
+    assert repairs[0].telemetry is not None
+    assert repairs[0].telemetry.open_circuits == (2,)
+    assert asc.repairs and asc.repairs[0][1] == 2
+    assert counts["elastic_repair_scan"] == 1     # one dispatch per repair
+    assert src.cluster.placement_version > v0
+    assert src.router.version == src.cluster.placement_version
+    assert s["requests"] == 14                    # nothing dropped
+
+
+def test_closed_loop_straggle_recover_rebalances_routing(serving_graph):
+    """A straggling machine shows up in the telemetry EWMA (priced wire
+    times, not injected factors) and the decision hands its weight to the
+    router's smooth WRR."""
+    g, labels = serving_graph
+    chaos = ChaosSchedule([
+        ChaosEvent(feed=4, kind="straggle", machine=1, factor=8.0),
+        ChaosEvent(feed=40, kind="recover", machine=1),
+    ], seed=0)
+    cfg = _slo_cfg(slo_ms=500.0, decide_every=8, warmup_windows=1,
+                   drift_ratio=1.5)
+    engine, src, sess, asc = _closed_loop(g, labels, cfg, chaos=chaos)
+    engine.run(48)
+    acts = [d.action for _, d in asc.decisions]
+    assert "rebalance" in acts
+    i = acts.index("rebalance")
+    snap = asc.decisions[i][0]
+    assert min(snap.speeds) == snap.speeds[1]     # EWMA fingered machine 1
+    assert src.router.weights is not None
+    assert np.argmin(src.router.weights) == 1     # routed away from it
+    homes = [r.home for r in engine.recorder.records if r.step > 8 * (i + 1)]
+    assert homes.count(1) < len(homes) / K        # fewer visits than fair
+
+
+def test_closed_loop_grow_single_scan_and_tau_escalation(serving_graph):
+    """A decision-window grow costs exactly ONE elastic_grow_scan dispatch
+    and is followed by tau_escalation fully-stale slots (widened §4.3
+    staleness while the migration settles)."""
+    g, labels = serving_graph
+    chaos = ChaosSchedule([ChaosEvent(feed=2, kind="burst", factor=4.0)],
+                          seed=0)
+    cfg = _slo_cfg(slo_ms=4.0, decide_every=8, warmup_windows=1,
+                   patience=1, max_k=6)
+    engine, src, sess, asc = _closed_loop(
+        g, labels, cfg, chaos=chaos, bandwidth=1e5, tau_escalation=4)
+    with dispatch_counter() as counts:
+        engine.run(32)
+    grows = [op for op in sess.ops if op.kind == "grow"]
+    assert grows and all(op.committed for op in grows)
+    assert counts["elastic_grow_scan"] == len(grows)
+    assert sess.k > K and src.cluster.k == sess.k
+    # the snapshot that triggered the grow rode along on the op
+    assert grows[0].telemetry is not None
+    assert grows[0].telemetry.p99_ms > cfg.slo_ms
+    # tau escalation: the slots right after the commit served fully stale
+    t_op = min(r.step for r in engine.recorder.records
+               if r.step > 8 and r.stale_entries > 0)
+    stale = [r for r in engine.recorder.records
+             if t_op <= r.step < t_op + 3]
+    assert stale and all(r.wire_s == 0.0 for r in stale)
+
+
+def test_closed_loop_replay_is_bit_deterministic(serving_graph):
+    """Same seeded chaos, two fresh stacks: identical events, ops,
+    decisions and shed counts — nothing a decision reads comes from the
+    wall clock (p99_measured_ms is reported but never gated)."""
+    g, labels = serving_graph
+
+    def run_once():
+        chaos = ChaosSchedule([
+            ChaosEvent(feed=2, kind="burst", factor=4.0),
+            ChaosEvent(feed=10, kind="kill", machine=1),
+            ChaosEvent(feed=20, kind="straggle", machine=2, factor=4.0),
+        ], seed=0)
+        cfg = _slo_cfg(slo_ms=8.0, decide_every=8, warmup_windows=1,
+                       patience=1, max_k=6)
+        engine, src, sess, asc = _closed_loop(
+            g, labels, cfg, chaos=chaos, bandwidth=1e5,
+            max_backlog_s=0.02, tau_escalation=2)
+        engine.run(32)
+        det = [(s.step, s.k, s.window, s.p50_ms, s.p99_ms, s.occupancy,
+                s.footprint, s.speeds, s.shed, s.served, s.open_circuits,
+                d.action, d.target, d.reason)
+               for s, d in asc.decisions]
+        ops = [(op.kind, op.k_before, op.k_after, op.machine, op.partner,
+                op.committed) for op in sess.ops]
+        return det, ops, src.events, dict(src.telemetry.shed)
+
+    a, b = run_once(), run_once()
+    assert a == b
+
+
+def test_kill_then_add_composition_through_engine(serving_graph):
+    """kill -> add with an elastic session (no autoscaler): the warm
+    repair and the forced grow both land mid-serve, each a single scan,
+    and the placement version reaches the router every time."""
+    g, labels = serving_graph
+    sess = _session(g)
+    cluster = _cluster(g, labels, parts_u=sess.parts.copy())
+    chaos = ChaosSchedule([
+        ChaosEvent(feed=3, kind="kill", machine=1),
+        ChaosEvent(feed=8, kind="add"),
+    ], seed=0)
+    cfg = ServingConfig(prefetch=True, warmup=2, seed=0, pad_multiple=512)
+    src = PSRequestSource(cluster, _mix(), cfg, chaos=chaos, elastic=sess)
+    engine = ServingEngine(src)
+    with dispatch_counter() as counts:
+        s = engine.run(14)
+    assert [op.kind for op in sess.ops] == ["repair", "grow"]
+    assert counts["elastic_repair_scan"] == 1
+    assert counts["elastic_grow_scan"] == 1
+    assert src.dead == set()
+    assert sess.k == K + 1 and src.cluster.k == K + 1
+    assert src.router.version == src.cluster.placement_version
+    assert src.router.k == K + 1
+    assert s["requests"] == 12
+
+
+def test_observe_wallclock_mode_feeds_measured_times(serving_graph):
+    """observe_wallclock=True: the session EWMA ingests MEASURED scan wall
+    time (one observation per lane), so injected chaos factors are
+    invisible by design and only actual slowness registers."""
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (XLA_FLAGS host device count)")
+    workers = min(4, len(jax.devices()))
+    chunks = ctr_like_stream(600, 1200, chunks=3, nnz_per_row=10,
+                             clusters=6, locality=0.8, seed=0)
+    scfg = ParsaStreamConfig(base=ParsaConfig(
+        k=K, backend="parallel_device", workers=workers, block_size=32,
+        merge_every=1, refine_v=False, seed=0))
+    sess = ElasticSession(
+        ElasticConfig(stream=scfg, observe_wallclock=True,
+                      straggler_bias=True),
+        num_v=1200,
+        chaos=ChaosSchedule([ChaosEvent(feed=1, kind="straggle", machine=0,
+                                        factor=100.0)], seed=0))
+    for ch in chunks:
+        sess.feed(ch)
+    w = sess.ewma.weights()
+    assert w.shape == (workers,) and np.isfinite(w).all()
+    # measured mode: every lane saw the same fused-dispatch wall time, so
+    # the injected 100x factor must NOT skew the weights
+    assert np.allclose(w, 1.0)
+
+
+def test_router_smooth_wrr_biases_away_from_slow(serving_graph):
+    g, labels = serving_graph
+    cluster = _cluster(g, labels)
+    r = Router(cluster)
+    r.set_weights([1.0, 1.0, 1.0, 0.2])
+    homes = [r.next_home() for _ in range(32)]
+    assert homes.count(3) < homes.count(0)        # down-weighted
+    assert set(homes) == {0, 1, 2, 3}             # starved of none
+    with pytest.raises(ValueError):
+        r.set_weights([1.0, 1.0])                 # wrong fleet size
+    with pytest.raises(ValueError):
+        r.set_weights([1.0, 1.0, 1.0, 0.0])       # non-positive
+    r.set_weights(None)
+    assert r.weights is None                      # plain RR restored

@@ -78,17 +78,28 @@ def test_engine_smoke_one_dispatch_per_request(serving_graph, prefetch):
 
 def test_async_overlap_is_measured_not_assumed(serving_graph):
     """Same cluster/workload, wire-dominated (slow link): async hides the
-    transfer behind compute — blocked_s collapses while wire_s stays."""
+    transfer behind compute — blocked_s collapses while wire_s stays.
+    The blocked/wall comparison is wall-clock and scheduler jitter can
+    inflate a single async run, so it gets best-of-3; the invariants
+    (equal wire, positive hidden overlap) stay strict on every attempt."""
     g, labels = serving_graph
     bw = 5e4
-    engine_s, _, _ = _engine(g, labels, prefetch=False, bandwidth=bw)
-    engine_a, _, _ = _engine(g, labels, prefetch=True, bandwidth=bw)
-    sync = engine_s.run(12)
-    asyn = engine_a.run(12)
-    assert asyn["wire_s"] == pytest.approx(sync["wire_s"], rel=0.5)
-    assert asyn["blocked_s"] < sync["blocked_s"] * 0.8
-    assert asyn["hidden_s"] > 0                  # wire actually overlapped
-    assert asyn["wall_s"] < sync["wall_s"]
+    last = None
+    for _ in range(3):
+        engine_s, _, _ = _engine(g, labels, prefetch=False, bandwidth=bw)
+        engine_a, _, _ = _engine(g, labels, prefetch=True, bandwidth=bw)
+        sync = engine_s.run(12)
+        asyn = engine_a.run(12)
+        assert asyn["wire_s"] == pytest.approx(sync["wire_s"], rel=0.5)
+        assert asyn["hidden_s"] > 0              # wire actually overlapped
+        if (asyn["blocked_s"] < sync["blocked_s"] * 0.8
+                and asyn["wall_s"] < sync["wall_s"]):
+            return
+        last = (asyn["blocked_s"], sync["blocked_s"],
+                asyn["wall_s"], sync["wall_s"])
+    pytest.fail("async never hid the wire in 3 attempts: "
+                f"blocked {last[0]:.4f}s vs sync {last[1]:.4f}s, "
+                f"wall {last[2]:.4f}s vs sync {last[3]:.4f}s")
 
 
 def test_update_propagates_between_requests(serving_graph):
