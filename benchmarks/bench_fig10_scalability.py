@@ -38,6 +38,7 @@ def _row(backend, workers, res, g, k, base_traffic):
     return {
         "backend": backend,
         "workers": workers,
+        "sketch": int(getattr(res.config, "set_repr", "exact") == "sketch"),
         # pack + scan: device backends split host-side packing into its own
         # timing entry, but it is still wall clock this backend spends —
         # keep the cross-backend comparison scope-equal
@@ -118,6 +119,21 @@ def run(scale: float = 0.6, k: int = 16, b: int = 32, acceptance: bool = False):
                             base_traffic),
                      "ideal_speedup": workers,
                      "modeled_speedup": workers / (1 + 0.02 * workers)})
+    # sketched sets over the same wire format: the workers OR-merge sketch
+    # buckets instead of full masks — all_gather bytes shrink by the column
+    # compression, the row schema (and quality column) stays the same
+    if n_dev >= 2:
+        w = min(8, n_dev)
+        hot = max(32, (g.num_v // 3) // 32 * 32)
+        cfg = ParsaConfig(k=k, backend="parallel_device", workers=w,
+                          merge_every=2, seed=0, refine_v=False,
+                          set_repr="sketch", sketch_hot_bits=hot,
+                          sketch_bucket_bits=max(32, hot // 64 * 32))
+        partition(g, cfg, init_sets=S0)          # warm the jitted pipeline
+        res = partition(g, cfg, init_sets=S0)
+        rows.append({**_row("parallel_device", w, res, g, k, base_traffic),
+                     "ideal_speedup": w,
+                     "modeled_speedup": w / (1 + 0.02 * w)})
     emit(rows, "fig10_scalability")
     emit_parsa_bench(rows, meta={"graph": f"ctr-like(scale={scale})",
                                  "k": k, "b": b,
@@ -159,7 +175,7 @@ def run_acceptance(n_u: int = 100_000, num_v: int = 65_536, k: int = 16,
     partition(g, cfg_seq)                        # warm the jitted pipeline
     seq = partition(g, cfg_seq)
     base = score(g, seq.parts_u, k)["traffic_max"]
-    rows.append({"backend": "device_scan", "workers": 1,
+    rows.append({"backend": "device_scan", "workers": 1, "sketch": 0,
                  "wall_clock_s": seq.timings["pack"]
                  + seq.timings["partition_u"],
                  "pushed_bytes": 0, "pulled_bytes": 0, "stale_pushes": 0,

@@ -25,6 +25,8 @@ from repro.kernels.parsa_cost import (
     parsa_cost_ref,
     parsa_cost_select,
     parsa_select_ref,
+    sketch_cost_select,
+    sketch_select_ref,
 )
 
 from .common import emit
@@ -121,6 +123,24 @@ def run(scale: float = 1.0, n_u: int | None = None, num_v: int | None = None):
                         nbr_1k, s, retired_1k),
                  "derived": "VMEM-resident tile,correctness-scale",
                  "backend": "-"})
+    # sketch-width fused cost+select: gridless, the whole (B,Ws) tile and
+    # (k,Ws) server sets VMEM-resident — the regime full masks never fit.
+    # Same 4096-bit width as the dense rows above so ref-vs-kernel and
+    # dense-vs-sketch are directly comparable.
+    rows.append({"name": "sketch_select_ref_jnp", "us_per_call":
+                 _bench(lambda a, b, r: sketch_select_ref(a, b, r)[0],
+                        nbr, s, retired),
+                 "derived": f"U={U},K={K},W={nv}", "backend": "-",
+                 "sketch": 1})
+    for B_s, nbr_b, ret_b in ((512, nbr[:512], retired[:512]),
+                              (1024, nbr_1k, retired_1k)):
+        rows.append({"name": f"sketch_select_pallas_interpret_B{B_s}",
+                     "us_per_call":
+                     _bench(lambda a, b, r: sketch_cost_select(
+                         a, b, r, use_kernel=True, interpret=True)[0],
+                            nbr_b, s, ret_b),
+                     "derived": "gridless VMEM-resident,correctness-scale",
+                     "backend": "-", "sketch": 1})
     # flash attention
     B, S, H, D = 1, 512, 4, 64
     q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
@@ -135,6 +155,10 @@ def run(scale: float = 1.0, n_u: int | None = None, num_v: int | None = None):
                  "derived": "correctness-scale only", "backend": "-"})
     # end-to-end blocked partitioner, seed vs device-resident pipeline
     bench_partitioner(rows, n_u=n_u, num_v=num_v)
+    # every row carries the sketch column (0 = dense/exact path) so the CSV
+    # stays rectangular and the trajectory can filter on it
+    for r in rows:
+        r.setdefault("sketch", 0)
     emit(rows, "kernels")
     return rows
 

@@ -32,6 +32,12 @@ SYSTEM_MIN_ASYNC = 1.05
 # most this fraction of offered requests while doing it.
 SLO_MIN_HOLD_FRAC = 0.95
 SLO_MAX_SHED_FRAC = 0.05
+# bench_sketch: the acceptance sketch geometry must compress the
+# width-dependent set structures by at least this ratio, and the sketch-mode
+# partition's TRUE-graph traffic_max may exceed the exact-mode run's by at
+# most this percentage at the quality-band scale.
+SKETCH_MIN_MEM_RATIO = 8.0
+SKETCH_MAX_QUALITY_PCT = 5.0
 
 
 def datasets(scale: float = 1.0) -> dict:

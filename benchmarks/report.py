@@ -208,10 +208,26 @@ def emit_slo_bench(rows: list[dict], meta: dict | None = None,
 
 
 def pipeline_phase_rows(res, backend: str, refine_backend: str) -> list[dict]:
-    """Flatten one PartitionResult's timings into BENCH_pipeline rows."""
+    """Flatten one PartitionResult's timings into BENCH_pipeline rows.
+
+    Every row also carries ``mem_bytes`` — the peak width-dependent
+    set-structure bytes of the run (``repro.sketch.set_structure_bytes``
+    at the width the scan actually ran: the sketched width for
+    ``set_repr="sketch"`` results, the true packed width otherwise) — so
+    the sketch compression ratio is machine-tracked next to the wall
+    clocks.
+    """
+    from repro.sketch import set_structure_bytes
+
+    cfg = res.config
+    workers = 1
+    if backend.startswith("parallel"):
+        workers = cfg.devices if cfg.devices is not None else cfg.workers
+    mem_bytes = set_structure_bytes(res.num_v, res.k, cfg.block_size,
+                                    workers=workers)
     return [
         {"backend": backend, "refine_backend": refine_backend,
-         "phase": phase, "wall_clock_s": seconds}
+         "phase": phase, "wall_clock_s": seconds, "mem_bytes": mem_bytes}
         for phase, seconds in sorted(res.timings.items())
     ]
 

@@ -17,8 +17,8 @@ def main() -> None:
 
     from . import (bench_chaos, bench_embedding_traffic, bench_fig7_vary_k,
                    bench_fig8_subgraphs, bench_fig9_global_init,
-                   bench_fig10_scalability, bench_kernels, bench_slo,
-                   bench_stream, bench_system, bench_table2,
+                   bench_fig10_scalability, bench_kernels, bench_sketch,
+                   bench_slo, bench_stream, bench_system, bench_table2,
                    bench_table34_dbpg)
 
     suites = {
@@ -30,6 +30,7 @@ def main() -> None:
         "table34": lambda: bench_table34_dbpg.run(scale=scale),
         "embedding": lambda: bench_embedding_traffic.run(),
         "kernels": lambda: bench_kernels.run(scale=scale),
+        "sketch": lambda: bench_sketch.run(scale=scale),
         "stream": lambda: bench_stream.run(scale=scale),
         "chaos": lambda: bench_chaos.run(scale=scale),
         "system": lambda: bench_system.run(scale=scale),

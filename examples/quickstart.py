@@ -90,6 +90,47 @@ if W == 1:
           "multi-worker run)")
 
 # --------------------------------------------------------------------------
+# sketched server sets: partition at a width the exact path cannot allocate
+# (repro.sketch).  Every packed structure — server sets, need words, the
+# parallel workers' stale copies — is O(k·|V|/32); at the paper's CTR scale
+# (|V| ~ 10^8) that is tens of GB of live set structures plus a transpose
+# side channel in the V-refine measured in terabytes.  set_repr="sketch"
+# maps the 10^8 columns into hot exact slots (top features by footprint)
+# plus hashed buckets for the cold tail; the SAME packed-uint32 pipeline
+# then runs at the sketched width, and parts_v is expanded back to all
+# 10^8 features at the end.
+from repro.sketch import set_structure_bytes
+
+NUM_V_HUGE = 100_000_000
+print(f"\nsketched sets: {NUM_V_HUGE:,} features (the paper's CTR scale)")
+rng_s = np.random.default_rng(0)
+rows_s, hot_s, tail_s = 20_000, 100_000, NUM_V_HUGE
+cols = np.where(rng_s.random((rows_s, 12)) < 0.7,
+                rng_s.zipf(1.3, (rows_s, 12)) % hot_s,     # hot Zipf head
+                rng_s.integers(0, tail_s, (rows_s, 12)))   # long cold tail
+from repro.core.bipartite import from_edges
+g_huge = from_edges(rows_s, NUM_V_HUGE,
+                    np.repeat(np.arange(rows_s), 12), cols.reshape(-1))
+cfg_sk = ParsaConfig(k=k, backend="device_scan", set_repr="sketch",
+                     sketch_hot_bits=16_384, sketch_bucket_bits=16_384,
+                     refine_backend="device", seed=0)
+exact_b = set_structure_bytes(NUM_V_HUGE, k, cfg_sk.block_size)
+res_sk = partition(g_huge, cfg_sk)
+sk = res_sk.sketch
+print(f"  exact-mode set structures would need {exact_b / 2**30:.1f} GiB "
+      f"(plus a ~TB-scale refine transpose) — never allocated")
+print(f"  sketch width {sk.width_bits:,} bits -> "
+      f"{sk.mem_bytes(k, cfg_sk.block_size) / 2**20:.1f} MiB "
+      f"({exact_b / sk.mem_bytes(k, cfg_sk.block_size):.0f}x smaller), "
+      f"traffic_max {res_sk.metrics.traffic_max}")
+print(f"  parts_v covers all {res_sk.parts_v.size:,} true features "
+      f"(hot exact, cold tail co-located by hash); "
+      f"total {res_sk.timings['total']:.1f}s on this host")
+print("(hot prefix >= |V| is bit-identical to the exact pipeline — "
+      "regression-tested; acceptance gates: benchmarks/bench_sketch.py "
+      "--acceptance)")
+
+# --------------------------------------------------------------------------
 # streaming: partition a graph that GROWS over time (repro.stream).
 # Examples arrive continuously in production (ad impressions, social
 # edges); a StreamSession keeps the packed server sets live on device and

@@ -51,6 +51,7 @@ from .kernels.parsa_cost import pack_bitmask, unpack_bitmask
 
 if TYPE_CHECKING:  # avoid the placement ↔ api import cycle at runtime
     from .core.placement import Placement
+    from .sketch import SketchSpec
 
 __all__ = [
     "ParsaConfig",
@@ -123,6 +124,7 @@ def __getattr__(name: str):
 
 _SELECTS = ("size", "footprint")
 _REFINE_BACKENDS = ("host", "device")
+_SET_REPRS = ("exact", "sketch")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +159,12 @@ class ParsaConfig:
     merge_every: int = 1       # parallel_device: blocks between OR-merges
                                #   (τ ≡ merge_every − 1 blocks of staleness)
     devices: int | None = None  # parallel_device mesh width; None → workers
+
+    # ---- sketched server sets (repro.sketch — any backend; unlocks the
+    #      VMEM-resident select kernel on the device backends)
+    set_repr: str = "exact"    # "exact" | "sketch" (column-compressed sets)
+    sketch_hot_bits: int = 4096    # exact identity slots (top-footprint V)
+    sketch_bucket_bits: int = 8192  # hashed shared slots for the cold tail
 
     # ---- composition
     refine_v: bool = True      # run Alg 2 (partition_v) after partition_u
@@ -199,6 +207,18 @@ class ParsaConfig:
         if self.devices is not None and self.devices < 1:
             raise ValueError(
                 f"devices must be >= 1 or None, got {self.devices}")
+        if self.set_repr not in _SET_REPRS:
+            raise ValueError(
+                f"set_repr must be one of {_SET_REPRS}, got "
+                f"{self.set_repr!r}")
+        if self.sketch_hot_bits < 0 or self.sketch_hot_bits % 32 != 0:
+            raise ValueError(
+                f"sketch_hot_bits must be a nonnegative multiple of 32 "
+                f"(packed word alignment), got {self.sketch_hot_bits}")
+        if self.sketch_bucket_bits <= 0 or self.sketch_bucket_bits % 32 != 0:
+            raise ValueError(
+                f"sketch_bucket_bits must be a positive multiple of 32 "
+                f"(packed word alignment), got {self.sketch_bucket_bits}")
         if self.sweeps < 1:
             raise ValueError(f"sweeps must be >= 1, got {self.sweeps}")
         if self.refine_backend not in _REFINE_BACKENDS:
@@ -229,13 +249,18 @@ class PartitionResult:
 
     parts_u: np.ndarray                 # (|U|,) int32
     parts_v: np.ndarray | None          # (|V|,) int32 or None (refine_v=False)
-    num_v: int
+    num_v: int                          # domain of s_masks — the sketched
+                                        #   width when ``sketch`` is set
     k: int
     config: ParsaConfig
     metrics: PartitionMetrics
     timings: dict[str, float]           # seconds per phase + "total"
     traffic: TrafficCounters | None = None   # parallel_sim / parallel_device
     placement: "Placement | None" = None     # config.placement only
+    sketch: "SketchSpec | None" = None  # set_repr="sketch": the column map
+                                        #   (parts_v is expanded to the TRUE
+                                        #   extent ``sketch.num_v``; metrics
+                                        #   are sketch-space estimates)
     _packed_sets: np.ndarray | None = dataclasses.field(
         default=None, repr=False, compare=False)
     _dense_sets: np.ndarray | None = dataclasses.field(
@@ -271,15 +296,23 @@ class PartitionResult:
         backend's packed ``s_masks`` flow straight into the next run's
         packed warm start (no dense (k, |V|) unpack), a host backend's
         dense sets stay dense — every backend accepts both.
+
+        Sketched results refine against the TRUE graph: the stored
+        ``SketchSpec`` is handed through so the new run reuses the exact
+        same column map (re-deriving a footprint-ranked map on the new
+        graph would silently scramble the warm-start masks).
         """
-        if graph.num_v != self.num_v:
+        if graph.num_v != self.num_v and not (
+                self.sketch is not None
+                and graph.num_v == self.sketch.num_v):
             raise ValueError(
                 f"refine() needs a graph over the same parameter side: "
                 f"result has num_v={self.num_v}, graph has "
                 f"num_v={graph.num_v}")
         sets = (self._packed_sets if self._packed_sets is not None
                 else self._dense_sets)
-        return partition(graph, config or self.config, init_sets=sets)
+        return partition(graph, config or self.config, init_sets=sets,
+                         sketch_spec=self.sketch)
 
 
 def partition(
@@ -287,6 +320,7 @@ def partition(
     config: ParsaConfig,
     *,
     init_sets: np.ndarray | None = None,
+    sketch_spec: "SketchSpec | None" = None,
 ) -> PartitionResult:
     """Run the full Parsa pipeline described by ``config`` on ``graph``.
 
@@ -308,8 +342,41 @@ def partition(
     timings: dict[str, float] = {}
     t_start = time.perf_counter()
 
+    # ---- sketch phase: compress the V columns once, then run the WHOLE
+    # pipeline (backend scan, refine, metrics) at the sketched width.  The
+    # union lattice the backends rely on is preserved exactly (a hash of a
+    # union is the union of the hashes), so nothing downstream changes —
+    # only the packed width does.
+    sketch = None
+    run_graph = graph
+    if getattr(config, "set_repr", "exact") == "sketch":
+        from .sketch import SketchSpec, rank_hot_columns
+
+        t0 = time.perf_counter()
+        if sketch_spec is not None:
+            sketch = sketch_spec
+        else:
+            hot_ids = None
+            if 0 < config.sketch_hot_bits < graph.num_v:
+                hot_ids = rank_hot_columns(graph, config.sketch_hot_bits)
+            sketch = SketchSpec.for_graph(
+                graph.num_v, config.sketch_hot_bits,
+                config.sketch_bucket_bits, seed=config.seed,
+                hot_ids=hot_ids)
+        if config.placement and not sketch.is_exact:
+            raise ValueError(
+                "placement=True needs exact parameter identities; a "
+                "compressing sketch co-locates hashed columns — raise "
+                "sketch_hot_bits to >= num_v or use set_repr='exact'")
+        run_graph = sketch.sketch_graph(graph)
+        if init_sets is not None and not sketch.is_exact:
+            w = np.asarray(init_sets).shape[1]
+            if w != sketch.width_words:  # true-domain sets: compress them
+                init_sets = sketch.sketch_masks(init_sets, graph.num_v)
+        timings["sketch"] = time.perf_counter() - t0
+
     t0 = time.perf_counter()
-    out: BackendOutput = backend(graph, config, init_sets=init_sets)
+    out: BackendOutput = backend(run_graph, config, init_sets=init_sets)
     if hasattr(out.parts_u, "block_until_ready"):
         # device-resident outputs: sync (no transfer) so phase attribution
         # doesn't leak the async scan into the refine clock
@@ -339,32 +406,39 @@ def partition(
         # only host backends' dense sets go through the packing coercion
         need_words = (jnp.asarray(out.s_masks) if out.s_masks is not None
                       else jnp.asarray(coerce_packed_sets(
-                          out.neighbor_sets, graph.num_v)))
+                          out.neighbor_sets, run_graph.num_v)))
     if config.refine_v:
         t0 = time.perf_counter()
         if on_device:
             from .core.jax_refine import refine_v_device  # lazy: jax cost
 
             parts_v_dev, need_words = refine_v_device(
-                graph, out.parts_u, config.k, sweeps=config.sweeps,
+                run_graph, out.parts_u, config.k, sweeps=config.sweeps,
                 chunk=config.refine_chunk, use_kernel=config.use_kernel,
                 interpret=config.interpret, need_words=need_words)
             parts_v_dev.block_until_ready()
             parts_v = np.asarray(parts_v_dev)
         else:
-            parts_v = partition_v(graph, np.asarray(out.parts_u), config.k,
-                                  sweeps=config.sweeps)
+            parts_v = partition_v(run_graph, np.asarray(out.parts_u),
+                                  config.k, sweeps=config.sweeps)
         timings["partition_v"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     if on_device:
         from .core.jax_refine import evaluate_device
 
-        metrics = evaluate_device(graph, out.parts_u, parts_v_dev, config.k,
-                                  need_words=need_words)
+        metrics = evaluate_device(run_graph, out.parts_u, parts_v_dev,
+                                  config.k, need_words=need_words)
     else:
-        metrics = evaluate(graph, np.asarray(out.parts_u), parts_v, config.k)
+        metrics = evaluate(run_graph, np.asarray(out.parts_u), parts_v,
+                           config.k)
     timings["metrics"] = time.perf_counter() - t0
+
+    if sketch is not None and parts_v is not None and not sketch.is_exact:
+        # back to the true parameter extent: every real column is served by
+        # the machine of its sketch slot (hot → its exact Alg 2 host,
+        # bucketed tail → hash co-location)
+        parts_v = sketch.expand_parts_v(parts_v)
 
     placement = None
     if config.placement:
@@ -372,7 +446,7 @@ def partition(
 
         t0 = time.perf_counter()
         placement = placement_from_parts(out.parts_u, parts_v,
-                                         graph.num_v, config.k)
+                                         run_graph.num_v, config.k)
         timings["placement"] = time.perf_counter() - t0
 
     timings["total"] = time.perf_counter() - t_start
@@ -380,13 +454,14 @@ def partition(
     return PartitionResult(
         parts_u=np.asarray(out.parts_u),
         parts_v=parts_v,
-        num_v=graph.num_v,
+        num_v=run_graph.num_v,
         k=config.k,
         config=config,
         metrics=metrics,
         timings=timings,
         traffic=out.traffic,
         placement=placement,
+        sketch=sketch,
         _packed_sets=None if out.s_masks is None else np.asarray(out.s_masks),
         _dense_sets=out.neighbor_sets,
     )

@@ -169,7 +169,8 @@ def device_scan_backend(graph: BipartiteGraph, config, init_sets=None) -> Backen
         use_kernel=config.use_kernel, interpret=config.interpret,
         seed=config.seed, cap=config.cap,
         as_numpy=getattr(config, "refine_backend", "host") != "device",
-        timings=timings)
+        timings=timings,
+        sketch=getattr(config, "set_repr", "exact") == "sketch")
     return BackendOutput(parts_u, s_masks=s_masks, timings=timings)
 
 
@@ -231,6 +232,7 @@ def parallel_device_backend(graph: BipartiteGraph, config, init_sets=None) -> Ba
         use_kernel=config.use_kernel, interpret=config.interpret,
         seed=config.seed, cap=config.cap,
         as_numpy=getattr(config, "refine_backend", "host") != "device",
-        timings=timings)
+        timings=timings,
+        sketch=getattr(config, "set_repr", "exact") == "sketch")
     return BackendOutput(parts_u, s_masks=s_masks,
                          traffic=TrafficCounters(**traffic), timings=timings)

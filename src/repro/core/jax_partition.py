@@ -79,6 +79,7 @@ from ..kernels.parsa_cost import (
     parsa_cost,
     parsa_cost_select,
     select_greedy_from_cost,
+    sketch_cost_select,
 )
 from .bipartite import BipartiteGraph
 
@@ -308,6 +309,7 @@ def _assign_block_rounds(
     k: int,
     use_kernel: bool,
     interpret: bool | None,
+    sketch: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Greedy-assign a block in balanced rounds.  Returns (parts, S', sizes').
 
@@ -315,6 +317,13 @@ def _assign_block_rounds(
     entry (property-tested); on the kernel path the cost tile lives only in
     VMEM (fused cost+select), on the jnp path it is carried and down-dated
     sparsely via the compact word lists.
+
+    ``sketch=True`` marks the packed width as a sketched domain
+    (``repro.sketch``): the kernel path switches to the gridless
+    VMEM-resident ``sketch_cost_select`` (the whole block tile fits in one
+    grid step at sketch widths).  The jnp path is width-agnostic — the
+    same integer program at a smaller W — so the flag changes nothing
+    there, which is precisely why the exact-parity regression holds.
     """
     nbr = _rebuild_nbr(widx, vals, tr_ids, tr_masks)
     B, W = nbr.shape
@@ -359,7 +368,8 @@ def _assign_block_rounds(
         slot→partition permutation gathers."""
         tile, s_masks, sizes, parts, retired = state
         if use_kernel:
-            u_sel, c_sel = parsa_cost_select(
+            select_fn = sketch_cost_select if sketch else parsa_cost_select
+            u_sel, c_sel = select_fn(
                 nbr, s_masks, retired,
                 order=iota_k if ord_ is None else ord_, enabled=en,
                 use_kernel=True, interpret=interpret)
@@ -433,7 +443,7 @@ def _assign_block_rounds(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "use_kernel", "interpret"),
+    static_argnames=("k", "use_kernel", "interpret", "sketch"),
     donate_argnums=(6, 7),
 )
 def _partition_scan(
@@ -449,13 +459,15 @@ def _partition_scan(
     k: int,
     use_kernel: bool,
     interpret: bool | None,
+    sketch: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """The whole partition as ONE XLA dispatch: scan blocks, carry (S, sizes)."""
 
     def per_block(carry, xs):
         s, sz = carry
         parts, s, sz = _assign_block_rounds(
-            *xs, s, sz, k=k, use_kernel=use_kernel, interpret=interpret)
+            *xs, s, sz, k=k, use_kernel=use_kernel, interpret=interpret,
+            sketch=sketch)
         return (s, sz), parts
 
     (s_masks, sizes), parts = jax.lax.scan(
@@ -475,6 +487,7 @@ def blocked_partition_u_impl(
     cap: int = 48,
     as_numpy: bool = True,
     timings: dict | None = None,
+    sketch: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Device-resident blocked greedy partition.
     Returns (parts_u, final packed s_masks (k, W) int32).
@@ -512,7 +525,7 @@ def blocked_partition_u_impl(
         jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
         jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
         s_masks, sizes,
-        k=k, use_kernel=use_kernel, interpret=interpret)
+        k=k, use_kernel=use_kernel, interpret=interpret, sketch=sketch)
     if not as_numpy:
         flat = parts_blocks.reshape(-1)[: graph.num_u]
         parts = jnp.zeros((graph.num_u,), jnp.int32).at[
@@ -639,7 +652,7 @@ def _pad_block_stack(packed: PackedBlocks, n_total: int) -> PackedBlocks:
 
 @functools.cache
 def _parallel_scan_fn(devices, k: int, merge_every: int, use_kernel: bool,
-                      interpret: bool | None):
+                      interpret: bool | None, sketch: bool = False):
     """Build (and cache) the jitted shard_map pipeline for one worker mesh.
 
     Each device scans its (n_super, merge_every, B, …) block stack against a
@@ -673,7 +686,8 @@ def _parallel_scan_fn(devices, k: int, merge_every: int, use_kernel: bool,
         def per_block(carry, xs):
             s, sz = carry
             parts, s, sz = _assign_block_rounds(
-                *xs, s, sz, k=k, use_kernel=use_kernel, interpret=interpret)
+                *xs, s, sz, k=k, use_kernel=use_kernel, interpret=interpret,
+                sketch=sketch)
             return (s, sz), parts
 
         def super_step(carry, xs):
@@ -767,6 +781,7 @@ def _run_parallel_packed_scan(
     shuffle_rng: np.random.Generator | None = None,
     worker_weights: np.ndarray | None = None,
     count_name: str = "parallel_partition_scan",
+    sketch: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, dict, np.ndarray | None]:
     """Shared Alg 4 core of ``parallel_blocked_partition_u_impl`` and the
     streaming parallel feed: pad the block stack to whole per-worker merge
@@ -823,7 +838,8 @@ def _run_parallel_packed_scan(
             x = x[perm]
         return jnp.asarray(x.reshape((workers, nb_per) + x.shape[1:]))
 
-    fn = _parallel_scan_fn(devices, k, merge_every, use_kernel, interpret)
+    fn = _parallel_scan_fn(devices, k, merge_every, use_kernel, interpret,
+                           sketch)
     _count_dispatch(count_name)
     parts_blocks, s_out, sizes_out, pushed_words = fn(
         shard(packed.valid), shard(packed.widx), shard(packed.vals),
@@ -854,6 +870,7 @@ def parallel_blocked_partition_u_impl(
     devices: tuple | None = None,
     as_numpy: bool = True,
     timings: dict | None = None,
+    sketch: bool = False,
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Device-parallel Algorithm 4: shard_map multi-worker Parsa.
 
@@ -899,7 +916,7 @@ def parallel_blocked_partition_u_impl(
     parts_blocks, s_out, _, traffic, _ = _run_parallel_packed_scan(
         packed, s_masks, sizes, k=k, workers=workers,
         merge_every=merge_every, use_kernel=use_kernel, interpret=interpret,
-        devices=devices)
+        devices=devices, sketch=sketch)
     if not as_numpy:
         flat = parts_blocks.reshape(-1)[: graph.num_u]
         parts = jnp.zeros((graph.num_u,), jnp.int32).at[

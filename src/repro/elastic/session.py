@@ -260,7 +260,8 @@ class ElasticSession:
             jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
             jnp.zeros((2, arena.W_cap), jnp.int32),
             jnp.zeros((2,), jnp.int32),
-            k=2, use_kernel=base.use_kernel, interpret=base.interpret)
+            k=2, use_kernel=base.use_kernel, interpret=base.interpret,
+            sketch=self.stream.sketch is not None)
         half = np.empty(rows.size, np.int32)
         half[order] = np.asarray(parts2).reshape(-1)[: rows.size]
         m2 = np.asarray(m2)
@@ -417,7 +418,8 @@ class ElasticSession:
             jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
             jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
             jnp.asarray(masks), jnp.asarray(sizes_live),
-            k=k, use_kernel=base.use_kernel, interpret=base.interpret)
+            k=k, use_kernel=base.use_kernel, interpret=base.interpret,
+            sketch=self.stream.sketch is not None)
         assigned = np.empty(rows.size, np.int32)
         assigned[order] = np.asarray(parts_sub).reshape(-1)[: rows.size]
         new_parts = parts.copy()

@@ -13,6 +13,7 @@ from .ops import (  # noqa: F401
     parsa_cost,
     parsa_cost_select,
     refine_sweep_chunk,
+    sketch_cost_select,
     unpack_bitmask,
 )
 from .ref import (  # noqa: F401
@@ -23,5 +24,10 @@ from .ref import (  # noqa: F401
     refine_sweep_ref,
     select_from_cost,
     select_greedy_from_cost,
+    sketch_select_ref,
 )
-from .select import refine_sweep_kernel  # noqa: F401
+from .select import (  # noqa: F401
+    SKETCH_KERNEL_MAX_WORDS,
+    refine_sweep_kernel,
+    sketch_select_kernel,
+)

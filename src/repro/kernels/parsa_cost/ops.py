@@ -12,11 +12,14 @@ from .ref import (
     parsa_select_greedy_ref,
     parsa_select_ref,
     refine_sweep_ref,
+    sketch_select_ref,
 )
 from .select import (
+    SKETCH_KERNEL_MAX_WORDS,
     packed_union_delta_kernel,
     parsa_select_kernel,
     refine_sweep_kernel,
+    sketch_select_kernel,
 )
 
 
@@ -429,6 +432,61 @@ def parsa_cost_select(
     u_sel, c_sel = parsa_select_kernel(
         nbr_p, s_p, ret_p.astype(jnp.int32)[:, None], order_in, enabled_in,
         greedy=greedy, bw=bw_, interpret=interpret)
+    if greedy:
+        return u_sel[0], c_sel[0]
+    return c_sel[0], u_sel[0]  # independent mode: (mins, argmins)
+
+
+def sketch_cost_select(
+    nbr_masks: jax.Array,   # (B, Ws) int32 packed sketched N(u)
+    s_masks: jax.Array,     # (k, Ws) int32 packed sketched S_i
+    retired: jax.Array,     # (B,) bool — rows excluded from selection
+    *,
+    order: jax.Array | None = None,    # (k,) int32 → greedy-round mode
+    enabled: jax.Array | None = None,  # (k,) bool slot gate (greedy mode)
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused cost+select at sketched widths: the whole (B, Ws) tile VMEM
+    resident in ONE grid step — no word grid, no cross-step accumulator.
+
+    Same contract as ``parsa_cost_select`` (independent → (mins, argmins),
+    greedy → (u_sel, c_sel)), bit-exact vs ``sketch_select_ref``.  Sketch
+    widths padded beyond ``SKETCH_KERNEL_MAX_WORDS`` words fall back to
+    the W-gridded ``parsa_cost_select`` — they no longer fit the
+    single-step VMEM budget.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, W = nbr_masks.shape
+    k = s_masks.shape[0]
+    greedy = order is not None
+    if enabled is None:
+        enabled = jnp.ones((k,), bool)
+    if not use_kernel:
+        u_sel, c_sel = sketch_select_ref(nbr_masks, s_masks, retired,
+                                         order, enabled, greedy=greedy)
+        if greedy:
+            return u_sel[0], c_sel[0]
+        return c_sel[0], u_sel[0]  # independent mode: (mins, argmins)
+    pw = (-W) % 128
+    if W + pw > SKETCH_KERNEL_MAX_WORDS:
+        return parsa_cost_select(nbr_masks, s_masks, retired, order=order,
+                                 enabled=enabled, interpret=interpret,
+                                 use_kernel=True)
+    pb = (-B) % 8
+    nbr_p = jnp.pad(nbr_masks, [(0, pb), (0, pw)])
+    s_p = jnp.pad(s_masks, [(0, 0), (0, pw)])
+    # padded rows are born retired so they never win a selection
+    ret_p = jnp.pad(retired, [(0, pb)], constant_values=True)
+    if greedy:
+        order_in = order.astype(jnp.int32)[None, :]
+    else:
+        order_in = jnp.arange(k, dtype=jnp.int32)[None, :]
+    enabled_in = enabled.astype(jnp.int32)[None, :]
+    u_sel, c_sel = sketch_select_kernel(
+        nbr_p, s_p, ret_p.astype(jnp.int32)[:, None], order_in, enabled_in,
+        greedy=greedy, interpret=interpret)
     if greedy:
         return u_sel[0], c_sel[0]
     return c_sel[0], u_sel[0]  # independent mode: (mins, argmins)

@@ -132,6 +132,26 @@ def refine_sweep_ref(
     return jax.lax.scan(step, cost, (tile.T, nneed, prev))
 
 
+def sketch_select_ref(nbr_masks, s_masks, retired, order=None, enabled=None,
+                      *, greedy=False):
+    """Oracle for the fully VMEM-resident sketch-select kernel.
+
+    Numerically this is the same fused cost+select program as
+    ``parsa_select_ref`` / ``parsa_select_greedy_ref`` — at sketch widths
+    the packed words are simply fewer, which is what lets the kernel hold
+    the whole (B, Ws) tile in one grid step.  Kept as a named oracle so
+    the kernel's bit-exactness contract is explicit and independently
+    testable.  Returns ((1, k) u/argmin, (1, k) cost) to match the kernel's
+    output layout.
+    """
+    cost = parsa_cost_ref(nbr_masks, s_masks)
+    if greedy:
+        u, c = select_greedy_from_cost(cost, retired, order, enabled)
+    else:
+        c, u = select_from_cost(cost, retired)
+    return u[None, :], c[None, :]
+
+
 def parsa_select_ref(nbr_masks, s_masks, retired):
     """Fused cost+select oracle, independent mode → ((k,) mins, (k,) argmins)."""
     return select_from_cost(parsa_cost_ref(nbr_masks, s_masks), retired)

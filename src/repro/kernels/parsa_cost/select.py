@@ -112,6 +112,105 @@ def _select_kernel(nbr_ref, s_ref, retired_ref, order_ref, enabled_ref,
             cmin_ref[...] = c_sel
 
 
+def _sketch_select_kernel(nbr_ref, s_ref, retired_ref, order_ref, enabled_ref,
+                          umin_ref, cmin_ref, *, greedy: bool):
+    """Fully VMEM-resident fused cost+select for sketched widths.
+
+    Unlike ``_select_kernel`` there is no W grid axis and no cross-step
+    scratch accumulator: the sketch compresses the packed width enough
+    (guarded ≤ ~2048 words by the wrapper) that the whole (B, Ws) nbr
+    tile, the (k, Ws) server sets, and the (B, k) cost tile live in VMEM
+    simultaneously for one grid step.  That removes the accumulator
+    read-modify-write per word tile *and* the grid bookkeeping — the
+    kernel is one streamed pass.  Bit-exact vs ``ref.sketch_select_ref``.
+    """
+    k = s_ref.shape[0]
+    B = nbr_ref.shape[0]
+    nbr = nbr_ref[...]  # (B, Ws) int32 — the entire sketched block tile
+
+    def accum(i, acc):
+        s_row = s_ref[i, :]  # (Ws,) int32
+        masked = nbr & ~s_row[None, :]
+        partial = jax.lax.population_count(masked).astype(jnp.int32).sum(
+            axis=1)
+        return jax.lax.dynamic_update_slice(acc, partial[:, None], (0, i))
+
+    cost = jax.lax.fori_loop(0, k, accum,
+                             jnp.zeros((B, k), jnp.int32), unroll=True)
+
+    ret = retired_ref[...] != 0                          # (B, 1)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+    if not greedy:
+        masked = jnp.where(ret, BIG, cost)               # (B, k)
+        mins = jnp.min(masked, axis=0)                   # (k,)
+        hit = masked == mins[None, :]
+        argmins = jnp.min(jnp.where(hit, iota_b, B), axis=0)
+        cmin_ref[...] = mins[None, :]
+        umin_ref[...] = argmins[None, :]
+    else:
+        order = order_ref[...]      # (1, k) int32
+        enabled = enabled_ref[...]  # (1, k) int32
+
+        def pick(j, carry):
+            u_sel, c_sel, ret = carry                    # (1,k),(1,k),(B,1)
+            col = jax.lax.dynamic_index_in_dim(
+                order, j, 1, keepdims=False)[0]
+            c = jax.lax.dynamic_slice(cost, (0, col), (B, 1))
+            c = jnp.where(ret, BIG, c)                   # (B, 1)
+            m = jnp.min(c)
+            u = jnp.min(jnp.where(c == m, iota_b, B))    # first min row
+            en = jax.lax.dynamic_index_in_dim(
+                enabled, j, 1, keepdims=False)[0] != 0
+            act = en & (m < BIG)
+            ret = ret | ((iota_b == u) & act)
+            iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+            u_sel = jnp.where(iota_k == j, jnp.where(act, u, -1), u_sel)
+            c_sel = jnp.where(iota_k == j, jnp.where(act, m, BIG), c_sel)
+            return u_sel, c_sel, ret
+
+        u0 = jnp.full((1, k), -1, jnp.int32)
+        c0 = jnp.full((1, k), BIG, jnp.int32)
+        u_sel, c_sel, _ = jax.lax.fori_loop(0, k, pick, (u0, c0, ret),
+                                            unroll=True)
+        umin_ref[...] = u_sel
+        cmin_ref[...] = c_sel
+
+
+# padded sketch widths beyond this many words exceed the VMEM budget of the
+# gridless kernel (B=1024 × 2048 × 4 B = 8 MiB for the nbr tile alone) —
+# wrappers must fall back to the W-gridded kernel above it
+SKETCH_KERNEL_MAX_WORDS = 2048
+
+
+@functools.partial(jax.jit, static_argnames=("greedy", "interpret"))
+def sketch_select_kernel(
+    nbr_masks: jax.Array,  # (B, Ws) int32, B % 8 == 0, Ws % 128 == 0
+    s_masks: jax.Array,    # (k, Ws) int32
+    retired: jax.Array,    # (B, 1) int32 (0/1)
+    order: jax.Array,      # (1, k) int32 column visit order (greedy mode)
+    enabled: jax.Array,    # (1, k) int32 slot gate (greedy mode)
+    *,
+    greedy: bool,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (u_sel (1, k), c_sel (1, k)) int32 — see ``_sketch_select_kernel``."""
+    B, Ws = nbr_masks.shape
+    k = s_masks.shape[0]
+    if Ws > SKETCH_KERNEL_MAX_WORDS:
+        raise ValueError(
+            f"sketch width {Ws} words exceeds the VMEM-resident budget "
+            f"({SKETCH_KERNEL_MAX_WORDS}); use parsa_select_kernel")
+    umin, cmin = pl.pallas_call(
+        functools.partial(_sketch_select_kernel, greedy=greedy),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nbr_masks, s_masks, retired, order, enabled)
+    return umin, cmin
+
+
 def _refine_sweep_kernel(words_ref, prev_ref, cost_ref,
                          parts_ref, cost_out_ref):
     """Fused Algorithm 2 cost-update: sweep one V chunk entirely in VMEM.

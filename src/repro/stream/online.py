@@ -149,7 +149,27 @@ class StreamSession:
             resolve_worker_devices(config.workers)
         self.config = config
         self.k = config.base.k
-        self.arena = StreamArena(config.base.k, num_v)
+        # Sketched arenas (base.set_repr="sketch"): the live sets, the
+        # appended CSR, and every scan run at the sketched width.  Streams
+        # use the IDENTITY hot prefix [0, hot_bits) — a footprint ranking
+        # cannot see future data — and the hash covers arbitrary column
+        # ids, so V growth is free: the arena width never grows in sketch
+        # mode.  ``self.sketch`` stays None when the spec collapses to the
+        # exact identity (hot_bits ≥ num_v), keeping bit-parity for free.
+        self.sketch = None
+        self._true_num_v = num_v
+        arena_v = num_v
+        base = config.base
+        if getattr(base, "set_repr", "exact") == "sketch":
+            from ..sketch import SketchSpec
+
+            spec = SketchSpec.for_graph(
+                num_v, base.sketch_hot_bits, base.sketch_bucket_bits,
+                seed=base.seed)
+            if not spec.is_exact:
+                self.sketch = spec
+                arena_v = spec.width_bits
+        self.arena = StreamArena(config.base.k, arena_v)
         self._parts_buf = np.empty(1024, np.int32)  # doubles with the arena
         self.tracker = DriftTracker(config.drift_window,
                                     config.drift_threshold,
@@ -198,6 +218,10 @@ class StreamSession:
         t_total = time.perf_counter()
         with dispatch_counter() as counts:
             n = chunk.num_u
+            if self.sketch is not None:
+                # host column remap only — the scan below stays one dispatch
+                self._true_num_v = max(self._true_num_v, chunk.num_v)
+                chunk = self.sketch.sketch_graph(chunk)
             self.arena.prepare(chunk)   # validate + capacity growth only
             order = self._rng.permutation(n)
             t0 = time.perf_counter()
@@ -216,7 +240,8 @@ class StreamSession:
                     jnp.asarray(packed.tr_ids), jnp.asarray(packed.tr_masks),
                     self.arena.s_masks, self.arena.sizes,
                     k=self.k, use_kernel=base.use_kernel,
-                    interpret=base.interpret)
+                    interpret=base.interpret,
+                    sketch=self.sketch is not None)
                 flat = np.asarray(parts_blocks).reshape(-1)[:n]
             else:
                 flat, s_out, sz_out, traffic = self._feed_parallel(
@@ -266,7 +291,8 @@ class StreamSession:
                 workers=workers, merge_every=base.merge_every,
                 use_kernel=base.use_kernel, interpret=base.interpret,
                 shuffle_rng=shuffle, worker_weights=worker_weights,
-                count_name="stream_feed_scan")
+                count_name="stream_feed_scan",
+                sketch=self.sketch is not None)
         B = packed.valid.shape[1]
         by_block = np.asarray(parts_blocks).reshape(-1, B)
         if perm is not None:
@@ -350,7 +376,8 @@ class StreamSession:
                     g_cap, self.k, workers=self.config.workers,
                     block=base.block_size, merge_every=base.merge_every,
                     init_sets=init_sets, use_kernel=base.use_kernel,
-                    interpret=base.interpret, seed=base.seed, cap=base.cap)
+                    interpret=base.interpret, seed=base.seed, cap=base.cap,
+                    sketch=self.sketch is not None)
             # the repair's own Alg 4 push/pull rides on the session total,
             # same units as the per-feed counters
             self._accumulate(TrafficCounters(**scan_traffic))
@@ -358,7 +385,8 @@ class StreamSession:
             new_parts, new_masks = blocked_partition_u_impl(
                 g_cap, self.k, block=base.block_size, init_sets=init_sets,
                 use_kernel=base.use_kernel, interpret=base.interpret,
-                seed=base.seed, cap=base.cap)
+                seed=base.seed, cap=base.cap,
+                sketch=self.sketch is not None)
         plan = plan_migration(new_parts, new_masks, old_parts, old_masks,
                               degrees=g.degree_u())
         self._parts_buf[: plan.parts_u.shape[0]] = plan.parts_u
@@ -422,6 +450,7 @@ class StreamSession:
         np.savez_compressed(
             path, **self.arena.state_arrays(),
             parts=self.parts,
+            true_num_v=self._true_num_v,
             n_feeds=self.n_feeds, repartitions=self.repartitions,
             need_exact=self._need_exact,
             traffic=np.asarray([self._pushed, self._pulled, self._tasks,
@@ -441,7 +470,13 @@ class StreamSession:
             raise ValueError(
                 f"snapshot has k={int(z['k'])} but config.base.k="
                 f"{config.base.k}")
-        session = cls(config, num_v=int(z["num_v"]))
+        # sketched sessions store the arena at the sketched width; the
+        # session is rebuilt from the TRUE extent so __init__ re-derives
+        # the identical spec (identity prefix + seeded hash — no data
+        # dependence), then the saved arena replaces the fresh one.
+        true_v = int(z["true_num_v"]) if "true_num_v" in z else int(z["num_v"])
+        session = cls(config, num_v=true_v)
+        session._true_num_v = true_v
         session.arena = StreamArena.from_state(z)
         parts = np.asarray(z["parts"], np.int32)
         session._store_parts(0, parts)
@@ -485,6 +520,10 @@ class StreamSession:
         metrics = evaluate_device(g, self.parts, parts_v_dev, self.k,
                                   need_words=need_words)
         timings["metrics"] = time.perf_counter() - t0
+        if self.sketch is not None and parts_v is not None:
+            # sketch-space V assignment → the true parameter extent (every
+            # real column served by the machine of its sketch slot)
+            parts_v = self.sketch.expand_parts_v(parts_v, self._true_num_v)
         timings["total"] = time.perf_counter() - t_total
         return PartitionResult(
             parts_u=self.parts.copy(), parts_v=parts_v, num_v=g.num_v,
@@ -492,6 +531,7 @@ class StreamSession:
             traffic=(self.traffic
                      if self._tasks or self._pushed or self._migrated
                      else None),
+            sketch=self.sketch,
             _packed_sets=s_logical)
 
 

@@ -1,0 +1,452 @@
+"""repro.sketch: column-compressed server sets — error-band properties of
+the linear-counting estimates, the exact union homomorphism the lattice
+algebra rides on, exact-parity regression (hot prefix >= |V| bit-identical
+to device_scan, host and parallel backends), the fused VMEM-resident
+sketch-cost+select kernel vs its oracle, O(1)-dispatch counters in sketch
+mode, and sketched stream/elastic sessions.  The seeded property sweeps
+extend the PR 5 padding-bit invariant suite; when hypothesis is installed
+(CI), a fuzzed variant widens the geometry coverage."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    ParsaConfig,
+    ParsaStreamConfig,
+    StreamSession,
+    partition,
+)
+from repro.core import evaluate, partition_v
+from repro.core.jax_partition import dispatch_counter
+from repro.graphs import ctr_like, ctr_like_stream, text_like
+from repro.kernels.parsa_cost import (
+    pack_bitmask,
+    packed_delta,
+    packed_union,
+    sketch_cost_select,
+    sketch_select_ref,
+    unpack_bitmask,
+)
+from repro.sketch import (
+    SketchSpec,
+    linear_counting_estimate,
+    packed_popcount_rows,
+    rank_hot_columns,
+    set_structure_bytes,
+)
+from repro.sketch.spec import linear_counting_error
+
+
+def _random_sets(rng, k, num_v, max_n):
+    return [rng.choice(num_v, size=int(rng.integers(1, max_n)),
+                       replace=False) for _ in range(k)]
+
+
+def _spec(num_v, hot, buckets, seed=0):
+    return SketchSpec(num_v=num_v, hot_bits=hot, bucket_bits=buckets,
+                      seed=seed)
+
+
+# ------------------------------------------------- property: the map itself
+@pytest.mark.parametrize("k", [8, 64])
+@pytest.mark.parametrize("seed", range(3))
+def test_union_homomorphism_is_exact(k, seed):
+    """sketch(a | b) == sketch(a) | sketch(b), bit for bit — the property
+    that lets union / OR-merge / the arena run unchanged on sketched words.
+    num_v is chosen ragged so the last true and sketched words are partial."""
+    rng = np.random.default_rng(seed)
+    num_v = int(rng.integers(900, 2000))
+    spec = _spec(num_v, hot=256, buckets=128, seed=seed)
+    a = np.asarray(pack_bitmask(_random_sets(rng, k, num_v, 200), num_v))
+    b = np.asarray(pack_bitmask(_random_sets(rng, k, num_v, 200), num_v))
+    sa, sb = spec.sketch_masks(a), spec.sketch_masks(b)
+    su = spec.sketch_masks(np.asarray(packed_union(a, b)))
+    assert np.array_equal(su, np.bitwise_or(sa, sb))
+
+
+@pytest.mark.parametrize("k", [8, 64])
+@pytest.mark.parametrize("seed", range(3))
+def test_delta_containment_and_popcount_one_sided(k, seed):
+    """sketch(a) & ~sketch(b) ⊆ sketch(a \\ b): a surviving sketched bit
+    implies a surviving true column, so sketched marginal gains never
+    invent work.  And popcount(sketch(x)) <= popcount(x): hashing only
+    merges bits (one-sided error, exact on the hot prefix)."""
+    rng = np.random.default_rng(seed + 100)
+    num_v = int(rng.integers(900, 2000))
+    spec = _spec(num_v, hot=256, buckets=128, seed=seed)
+    a = np.asarray(pack_bitmask(_random_sets(rng, k, num_v, 300), num_v))
+    b = np.asarray(pack_bitmask(_random_sets(rng, k, num_v, 300), num_v))
+    sa, sb = spec.sketch_masks(a), spec.sketch_masks(b)
+    sd = spec.sketch_masks(np.asarray(packed_delta(a, b)))
+    lhs = np.bitwise_and(sa, np.bitwise_not(sb))
+    assert not np.any(np.bitwise_and(lhs, np.bitwise_not(sd))), \
+        "sketched delta lost a surviving bit"
+    assert np.all(packed_popcount_rows(sa) <= packed_popcount_rows(a))
+    # hot-only sets sketch losslessly
+    hot_sets = [rng.choice(spec.hot_bits, size=40, replace=False)
+                for _ in range(k)]
+    hp = np.asarray(pack_bitmask(hot_sets, num_v))
+    assert np.array_equal(packed_popcount_rows(spec.sketch_masks(hp)),
+                          packed_popcount_rows(hp))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_linear_counting_band(seed):
+    """estimate_cardinality stays within error_band (4σ of the Whang et al.
+    variance) of the true cardinality across load factors t = n/m up to ~2."""
+    rng = np.random.default_rng(seed)
+    num_v = 50_000
+    spec = _spec(num_v, hot=512, buckets=2048, seed=seed)
+    for tail_n in (50, 400, 1500, 4000):
+        cols = np.concatenate([
+            rng.choice(spec.hot_bits, size=30, replace=False),
+            spec.hot_bits + rng.choice(num_v - spec.hot_bits, size=tail_n,
+                                       replace=False)])
+        row = np.asarray(pack_bitmask([spec.map_columns(cols)],
+                                      spec.width_bits))[0]
+        est = spec.estimate_cardinality(row)
+        band = spec.error_band(tail_n, sigmas=4.0)
+        assert abs(est - cols.size) <= band, \
+            f"tail_n={tail_n}: |{est:.0f} - {cols.size}| > {band:.0f}"
+
+
+def test_padding_bits_zero_in_sketched_masks():
+    """Extends the PR 5 invariant: a ragged sketched width keeps every bit
+    >= width_bits zero through sketch_masks and packed union/delta."""
+    rng = np.random.default_rng(7)
+    num_v = 1111
+    spec = _spec(num_v, hot=96, buckets=72)   # width 168: ragged last word
+    assert spec.width_bits % 32 != 0
+    a = spec.sketch_masks(
+        np.asarray(pack_bitmask(_random_sets(rng, 6, num_v, 400), num_v)))
+    b = spec.sketch_masks(
+        np.asarray(pack_bitmask(_random_sets(rng, 6, num_v, 400), num_v)))
+    W = a.shape[1]
+    for m in (a, b, np.asarray(packed_union(a, b)),
+              np.asarray(packed_delta(a, b))):
+        dense = unpack_bitmask(m, W * 32)
+        assert not dense[:, spec.width_bits:].any()
+
+
+def test_map_columns_ranked_hot_ids_and_growth():
+    """Ranked hot ids get identity-rank slots; all other columns — including
+    ids >= num_v (growing streams) — land in the bucket region."""
+    g = ctr_like(500, 2000, nnz_per_row=12, seed=0)
+    hot_ids = rank_hot_columns(g, 64)
+    spec = SketchSpec(num_v=2000, hot_bits=64, bucket_bits=96,
+                      hot_ids=hot_ids)
+    got = spec.map_columns(hot_ids)
+    assert np.array_equal(got, np.arange(64))
+    cold = np.setdiff1d(np.arange(2000), hot_ids)[:500]
+    mc = spec.map_columns(cold)
+    assert np.all((mc >= 64) & (mc < spec.width_bits))
+    grown = spec.map_columns(np.array([2000, 5000, 10**9]))
+    assert np.all((grown >= 64) & (grown < spec.width_bits))
+    # degree ranking: every hot column's degree >= every cold column's
+    deg = np.bincount(g.u_indices, minlength=g.num_v)
+    assert deg[hot_ids].min() >= deg[np.setdiff1d(np.arange(2000),
+                                                  hot_ids)].max()
+
+
+def test_for_graph_collapses_to_identity_and_expand_round_trip():
+    spec = SketchSpec.for_graph(300, hot_bits=512, bucket_bits=128)
+    assert spec.is_exact and spec.width_bits == 300
+    assert np.array_equal(spec.map_columns(np.arange(300)), np.arange(300))
+    # compressing expand: every true column inherits its slot's machine
+    spec_c = _spec(1000, hot=128, buckets=64)
+    pv_sketch = np.arange(spec_c.width_bits, dtype=np.int32) % 4
+    pv = spec_c.expand_parts_v(pv_sketch)
+    assert pv.shape == (1000,)
+    assert np.array_equal(
+        pv, pv_sketch[spec_c.map_columns(np.arange(1000, dtype=np.int64))])
+
+
+def test_spec_validation_and_memory_model():
+    with pytest.raises(ValueError, match="bucket_bits"):
+        SketchSpec(num_v=100, hot_bits=32, bucket_bits=0)
+    with pytest.raises(ValueError, match="hot_ids"):
+        SketchSpec(num_v=100, hot_bits=32, bucket_bits=32,
+                   hot_ids=np.arange(5))
+    spec = _spec(10**8, hot=65_536, buckets=65_536)
+    ratio = spec.exact_mem_bytes(16, 1024) / spec.mem_bytes(16, 1024)
+    assert ratio > 700                       # 1e8 → 2^17 bits
+    assert set_structure_bytes(2**17, 16, 1024, workers=4) == \
+        4 * set_structure_bytes(2**17, 16, 1024, workers=1)
+
+
+# ------------------------------------------ optional hypothesis fuzz (CI)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(64, 3000), st.integers(0, 2**31), st.integers(1, 64))
+    def test_fuzz_union_homomorphism(num_v, seed, k):
+        rng = np.random.default_rng(seed)
+        hot = int(rng.integers(0, num_v))
+        spec = SketchSpec(num_v=num_v, hot_bits=hot,
+                          bucket_bits=int(rng.integers(1, 256)), seed=seed)
+        a = np.asarray(pack_bitmask(
+            _random_sets(rng, k, num_v, min(100, num_v)), num_v))
+        b = np.asarray(pack_bitmask(
+            _random_sets(rng, k, num_v, min(100, num_v)), num_v))
+        sa, sb = spec.sketch_masks(a), spec.sketch_masks(b)
+        su = spec.sketch_masks(np.asarray(packed_union(a, b)))
+        assert np.array_equal(su, np.bitwise_or(sa, sb))
+        assert np.all(packed_popcount_rows(sa) <= packed_popcount_rows(a))
+except ImportError:                           # container has no hypothesis;
+    pass                                      # CI installs it and runs this
+
+
+def test_linear_counting_estimate_edge_cases():
+    assert linear_counting_estimate(0, 64) == 0.0
+    assert linear_counting_estimate(64, 64) > 64  # saturation clamp, finite
+    assert linear_counting_error(64, 64) > linear_counting_error(4, 64)
+
+
+# ----------------------------------------------------- exact-parity facade
+def test_sketch_exact_parity_host_and_parallel():
+    """set_repr="sketch" with hot prefix >= |V| is bit-identical to the
+    exact device_scan pipeline — parts, sets, metrics — for the host scan
+    and the parallel backend, so the sketch path cannot drift when it is
+    not compressing."""
+    g = text_like(500, 900, mean_len=15, seed=9)
+    for backend, extra in [("device_scan", dict(block_size=64)),
+                           ("parallel_device",
+                            dict(workers=1, block_size=64, merge_every=2))]:
+        cfg = ParsaConfig(k=8, backend=backend, sweeps=2, **extra)
+        ref = partition(g, cfg)
+        skc = partition(g, cfg.replace(set_repr="sketch",
+                                       sketch_hot_bits=1024,
+                                       sketch_bucket_bits=32))
+        assert np.array_equal(ref.parts_u, skc.parts_u), backend
+        assert np.array_equal(ref.parts_v, skc.parts_v), backend
+        assert np.array_equal(np.asarray(ref.s_masks),
+                              np.asarray(skc.s_masks)), backend
+        assert ref.metrics.as_dict() == skc.metrics.as_dict(), backend
+        assert skc.sketch is not None and skc.sketch.is_exact
+
+
+def test_sketch_compressing_facade_end_to_end():
+    """A compressing run: scan + refine at the sketched width, parts_v
+    expanded to the true extent, placement forbidden, timings recorded."""
+    g = ctr_like(800, 4000, nnz_per_row=15, seed=2)
+    cfg = ParsaConfig(k=8, backend="device_scan", block_size=128,
+                      set_repr="sketch", sketch_hot_bits=1024,
+                      sketch_bucket_bits=512)
+    res = partition(g, cfg)
+    assert res.sketch is not None and not res.sketch.is_exact
+    assert res.num_v == res.sketch.width_bits        # sets live sketched
+    assert res.parts_v.shape == (4000,)              # expanded to true V
+    assert res.parts_u.shape == (800,) and res.parts_u.max() < 8
+    assert "sketch" in res.timings
+    # cold-tail co-location: a bucketed column's machine equals its slot's
+    pv_sketch_width = res.sketch.width_bits
+    assert res.s_masks.shape[1] == (pv_sketch_width + 31) // 32
+    with pytest.raises(ValueError, match="placement"):
+        partition(g, cfg.replace(placement=True))
+
+
+def test_sketch_refine_warm_start_keeps_spec():
+    """result.refine(next_graph) re-uses the SAME spec (warm masks live in
+    its sketch space — re-deriving a ranked spec would scramble them)."""
+    g1 = ctr_like(600, 4000, nnz_per_row=15, seed=2)
+    g2 = ctr_like(500, 4000, nnz_per_row=15, seed=3)
+    cfg = ParsaConfig(k=8, backend="device_scan", block_size=128,
+                      set_repr="sketch", sketch_hot_bits=1024,
+                      sketch_bucket_bits=512)
+    r1 = partition(g1, cfg)
+    r2 = r1.refine(g2)
+    assert r2.sketch is r1.sketch
+    want = partition(g2, cfg, init_sets=r1.s_masks, sketch_spec=r1.sketch)
+    assert np.array_equal(r2.parts_u, want.parts_u)
+    assert np.array_equal(np.asarray(r2.s_masks), np.asarray(want.s_masks))
+
+
+def test_sketch_quality_tracks_exact():
+    """At 6x column compression with a ranked hot prefix the sketched
+    partition's true-graph traffic_max stays within a loose factor of the
+    exact run's (the tight 5% band is asserted at bench scale — this pins
+    against catastrophic regressions at test scale)."""
+    g = ctr_like(2000, 12_000, nnz_per_row=20, seed=5)
+    k = 8
+    cfg = ParsaConfig(k=k, backend="device_scan", block_size=256,
+                      refine_v=False)
+    re_ = partition(g, cfg)
+    rs = partition(g, cfg.replace(set_repr="sketch", sketch_hot_bits=1024,
+                                  sketch_bucket_bits=1024))
+    te = evaluate(g, re_.parts_u, partition_v(g, re_.parts_u, k), k
+                  ).traffic_max
+    ts = evaluate(g, rs.parts_u, partition_v(g, rs.parts_u, k), k
+                  ).traffic_max
+    assert ts <= 1.5 * te, (ts, te)
+
+
+# ------------------------------------------------ fused sketch select kernel
+@pytest.mark.parametrize("B", [256, 1024])
+@pytest.mark.parametrize("k", [8, 64])
+@pytest.mark.parametrize("greedy", [False, True])
+def test_sketch_select_kernel_bit_exact(B, k, greedy):
+    """The gridless VMEM-resident kernel is bit-exact vs sketch_select_ref
+    in interpret mode across block sizes, server counts, and both select
+    modes, on a ragged sketched width (Ws = 12 words, padded to one lane
+    tile inside the wrapper)."""
+    rng = np.random.default_rng(B + k + greedy)
+    width = 372                                   # 12 words, ragged
+    nbr = np.asarray(pack_bitmask(
+        [rng.choice(width, size=rng.integers(1, 60)) for _ in range(B)],
+        width))
+    s = np.asarray(pack_bitmask(
+        (rng.random((k, width)) < 0.15), width))
+    retired = rng.random(B) < 0.1
+    order = rng.permutation(k).astype(np.int32)
+    enabled = (rng.random(k) < 0.9)
+    import jax.numpy as jnp
+
+    args = (jnp.asarray(nbr), jnp.asarray(s), jnp.asarray(retired))
+    kw = dict(order=jnp.asarray(order), enabled=jnp.asarray(enabled)) \
+        if greedy else {}
+    got = sketch_cost_select(*args, use_kernel=True, interpret=True,
+                             **kw)
+    want = sketch_cost_select(*args, use_kernel=False, **kw)
+    assert np.array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_sketch_select_ref_matches_dense_semantics():
+    """On an uncompressed width the sketch oracle must agree with the
+    packed cost + select composition it claims to fuse."""
+    rng = np.random.default_rng(3)
+    B, k, width = 128, 8, 640
+    nbr = np.asarray(pack_bitmask(
+        [rng.choice(width, size=20) for _ in range(B)], width))
+    s = np.asarray(pack_bitmask((rng.random((k, width)) < 0.2), width))
+    retired = np.zeros(B, bool)
+    u, c = sketch_select_ref(nbr, s, retired, greedy=False)
+    from repro.kernels.parsa_cost import parsa_cost_ref
+
+    cost = np.asarray(parsa_cost_ref(nbr, s))
+    assert np.array_equal(np.asarray(c)[0], cost.min(axis=0))
+    assert np.array_equal(np.asarray(u)[0], cost.argmin(axis=0))
+
+
+def test_sketch_select_kernel_width_guard():
+    """Widths beyond SKETCH_KERNEL_MAX_WORDS fall back to the W-gridded
+    dense kernel path instead of overflowing VMEM."""
+    from repro.kernels.parsa_cost import SKETCH_KERNEL_MAX_WORDS
+
+    rng = np.random.default_rng(0)
+    width = (SKETCH_KERNEL_MAX_WORDS + 128) * 32
+    nbr = np.asarray(pack_bitmask(
+        [rng.choice(width, size=10) for _ in range(16)], width))
+    s = np.asarray(pack_bitmask([rng.choice(width, size=50)
+                                 for _ in range(4)], width))
+    retired = np.zeros(16, bool)
+    got = sketch_cost_select(nbr, s, retired, use_kernel=True,
+                             interpret=True)
+    want = sketch_cost_select(nbr, s, retired, use_kernel=False)
+    assert np.array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+# --------------------------------------------------- O(1) dispatch + stream
+def test_sketch_mode_o1_dispatches():
+    """The per-phase dispatch counters hold unchanged in sketch mode —
+    compression changes widths, never the launch structure."""
+    g = ctr_like(800, 4000, nnz_per_row=15, seed=2)
+    cfg = ParsaConfig(k=8, backend="device_scan", block_size=128,
+                      refine_backend="device", set_repr="sketch",
+                      sketch_hot_bits=1024, sketch_bucket_bits=512)
+    partition(g, cfg)                             # warm the jitted pipeline
+    with dispatch_counter() as counts:
+        partition(g, cfg)
+    assert counts == {"partition_scan": 1,
+                      "refine_scan": 1, "metrics": 1}, counts
+
+
+def _sketch_stream_cfg(k=4, hot=256, buckets=128, **kw):
+    base = ParsaConfig(k=k, backend="device_scan", block_size=64,
+                       use_kernel=False, refine_v=False, set_repr="sketch",
+                       sketch_hot_bits=hot, sketch_bucket_bits=buckets)
+    return ParsaStreamConfig(base=base, **kw)
+
+
+def test_stream_sketch_feed_grow_and_o1_dispatch():
+    """Sketched arena: feeds stay one dispatch, the arena's packed width is
+    the sketch width, V growth beyond num_v is free (the hash covers any
+    column id), and the result expands parts_v to the true extent."""
+    num_v = 1500
+    chunks = ctr_like_stream(600, num_v, chunks=3, nnz_per_row=10, seed=1)
+    sess = StreamSession(_sketch_stream_cfg(repartition="never"),
+                         num_v=num_v)
+    assert sess.sketch is not None
+    assert sess.arena.num_v == sess.sketch.width_bits
+    for ch in chunks:
+        with dispatch_counter() as counts:
+            sess.feed(ch)
+        assert counts["stream_feed_scan"] == 1
+        assert sum(v for n, v in counts.items() if "scan" in n) == 1
+    grown = BipartiteGraphGrow(chunks[0], num_v + 800)
+    sess.feed(grown)                              # V grew past num_v
+    res = sess.result()
+    assert res.parts_u.shape[0] == sess.arena.num_u
+    assert res.sketch is sess.sketch
+
+
+def BipartiteGraphGrow(chunk, new_num_v):
+    """A copy of ``chunk`` claiming a larger V extent (stream growth)."""
+    from repro.core.bipartite import BipartiteGraph
+
+    return BipartiteGraph(chunk.num_u, new_num_v,
+                          np.asarray(chunk.u_indptr),
+                          np.asarray(chunk.u_indices))
+
+
+def test_stream_sketch_save_load_bit_identical(tmp_path):
+    """Snapshot round trip rebuilds the identical spec from config + true
+    extent: the resumed session feeds bit-identically."""
+    num_v = 1200
+    chunks = ctr_like_stream(500, num_v, chunks=3, nnz_per_row=10, seed=4)
+    cfg = _sketch_stream_cfg(repartition="never")
+    sess = StreamSession(cfg, num_v=num_v)
+    sess.feed(chunks[0])
+    sess.feed(chunks[1])
+    path = tmp_path / "sketch_session.npz"
+    sess.save(path)
+    restored = StreamSession.load(path, cfg)
+    assert restored.sketch is not None
+    assert restored.sketch.width_bits == sess.sketch.width_bits
+    assert restored._true_num_v == sess._true_num_v
+    u1 = sess.feed(chunks[2])
+    u2 = restored.feed(chunks[2])
+    assert np.array_equal(u2.parts, u1.parts)
+    assert np.array_equal(restored.arena.masks_np(), sess.arena.masks_np())
+
+
+def test_elastic_sketch_grow_repair_one_dispatch():
+    """Elastic ops on a sketched arena: grow and repair stay one scan each
+    and leave a consistent sketched session."""
+    from repro.api import ParsaStreamConfig
+    from repro.elastic import ElasticConfig, ElasticSession
+
+    base = ParsaConfig(k=4, backend="device_scan", block_size=64,
+                       refine_v=False, set_repr="sketch",
+                       sketch_hot_bits=256, sketch_bucket_bits=128)
+    cfg = ElasticConfig(stream=ParsaStreamConfig(base=base,
+                                                 repartition="never"),
+                        min_k=2, max_k=16)
+    sess = ElasticSession(cfg, num_v=1500)
+    for ch in ctr_like_stream(600, 1500, chunks=3, nnz_per_row=10, seed=1):
+        sess.feed(ch)
+    assert sess.stream.sketch is not None
+    k0 = sess.k
+    with dispatch_counter() as counts:
+        op = sess.grow_k(force=True)
+    assert op.committed and sess.k == k0 + 1
+    assert counts["elastic_grow_scan"] == 1
+    assert sum(v for n, v in counts.items() if "scan" in n) == 1
+    with dispatch_counter() as counts:
+        op = sess.repair(1)
+    assert counts["elastic_repair_scan"] == 1
+    assert sum(v for n, v in counts.items() if "scan" in n) == 1
+    assert sess.parts.max() < sess.k
+    assert sess.parts.shape[0] == sess.stream.arena.num_u

@@ -171,6 +171,41 @@ def test_padding_bits_stay_zero_through_stream_and_need(num_v):
     assert got.as_dict() == want.as_dict()
 
 
+def test_padding_bits_stay_zero_through_sketched_stream():
+    """PR 9 extension of the invariant, both sketch regimes.  Compressing:
+    the arena runs at the word-aligned sketched width and every set bit
+    stays inside it.  Exact-collapse (hot >= |V|): the arena runs at the
+    ragged TRUE width and the PR 5 padding invariant must survive the
+    sketch-mode plumbing bit for bit.  (Truly ragged sketched widths need
+    a hand-built SketchSpec — covered in test_sketch.py.)"""
+    num_v = 1001                                  # ragged true width
+    chunks = text_like_stream(240, num_v, chunks=3, mean_len=9, seed=3)
+
+    base = ParsaConfig(k=4, backend="device_scan", block_size=64,
+                       use_kernel=False, refine_v=False, set_repr="sketch",
+                       sketch_hot_bits=96, sketch_bucket_bits=64)
+    sess = StreamSession(ParsaStreamConfig(base=base), num_v=num_v)
+    assert sess.sketch is not None
+    width = sess.sketch.width_bits
+    assert sess.arena.num_v == width == 160
+    for ch in chunks:
+        sess.feed(ch)
+        assert _padding_bits_zero(np.asarray(sess.arena.s_masks), width)
+
+    base_x = base.replace(sketch_hot_bits=1024)   # >= num_v: exact collapse
+    sx = StreamSession(ParsaStreamConfig(base=base_x), num_v=num_v)
+    assert sx.sketch is None and sx.arena.num_v == num_v
+    for ch in chunks:
+        sx.feed(ch)
+        assert _padding_bits_zero(np.asarray(sx.arena.s_masks), num_v)
+    # exact collapse is bit-identical to the plain stream (PR 9 regression)
+    plain = StreamSession(_stream_cfg(), num_v=num_v)
+    for ch in chunks:
+        plain.feed(ch)
+    assert np.array_equal(sx.parts, plain.parts)
+    assert np.array_equal(sx.arena.masks_np(), plain.arena.masks_np())
+
+
 # ------------------------------------------- satellite: degenerate parity
 def test_one_chunk_feed_bit_identical_to_device_scan():
     """Feeding the entire graph as ONE chunk is the device_scan backend:
