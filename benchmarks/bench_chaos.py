@@ -176,7 +176,7 @@ def run_acceptance(n_u: int = 60_000, num_v: int = 49_152, k0: int = 8,
           f"{baseline} ({quality_pct:+.2f}%)")
 
     emit(rows, name)
-    emit_chaos_bench(rows, meta={
+    emit_chaos_bench(rows, quick=name.endswith("_quick"), meta={
         "graph": f"text_like({n_u}x{num_v})", "k0": k0, "k_final": final_k,
         "chunks": chunks, "block_size": block, "adds": adds, "kills": kills,
         "migration_bytes_total": int(sess.traffic.migration_bytes),

@@ -46,11 +46,16 @@ detection transient).
 """
 from __future__ import annotations
 
+import dataclasses
+import pathlib
+
 import numpy as np
 
 from repro.api import (ChaosEvent, ChaosSchedule, ElasticConfig,
-                       ElasticSession, ParsaConfig, ParsaStreamConfig,
-                       SLOAutoscaler, SLOConfig)
+                       ElasticSession, Observability, ParsaConfig,
+                       ParsaStreamConfig, SLOAutoscaler, SLOConfig,
+                       chrome_trace_json, save_chrome_trace)
+from repro.obs.recorder import CAUSE_KINDS
 from repro.core import partition_v
 from repro.core.jax_partition import dispatch_counter
 from repro.elastic import AutoscaleDecision
@@ -192,8 +197,14 @@ def _closed_loop_run(g, labels, parts_u, parts_v, k0, dcfg, bandwidth,
                      scfg, slo_cfg: SLOConfig, events, serve_cfg,
                      n_slots: int):
     """One full closed-loop serving run on fresh state; returns
-    (autoscaler, source, session, engine summary, dispatch counts)."""
-    asc = SLOAutoscaler(slo_cfg)
+    (autoscaler, source, session, engine summary, dispatch counts, obs).
+
+    Every run carries its own ``Observability`` (tracer + flight
+    recorder): the seeded replay pair must produce byte-identical trace
+    and event streams, and ``recorder.explain()`` must attribute every
+    violated post-warmup window — both gated in ``_bench``."""
+    obs = Observability()
+    asc = SLOAutoscaler(dataclasses.replace(slo_cfg, obs=obs))
     sess = ElasticSession(
         ElasticConfig(stream=scfg, min_k=slo_cfg.min_k,
                       max_k=slo_cfg.max_k),
@@ -203,13 +214,14 @@ def _closed_loop_run(g, labels, parts_u, parts_v, k0, dcfg, bandwidth,
         "stream placement drifted from the serving placement"
     cluster = _fresh_cluster(g, labels, parts_u, parts_v, k0, dcfg,
                              bandwidth)
-    src = PSRequestSource(cluster, _mix(), serve_cfg,
+    src = PSRequestSource(cluster, _mix(),
+                          dataclasses.replace(serve_cfg, obs=obs),
                           chaos=ChaosSchedule(list(events), seed=0),
                           elastic=sess, autoscaler=asc)
     engine = ServingEngine(src)
     with dispatch_counter() as counts:
         summary = engine.run(n_slots)
-    return asc, src, sess, summary, dict(counts)
+    return asc, src, sess, summary, dict(counts), obs
 
 
 def _hold_frac(decisions, warmup_windows: int, slo_ms: float) -> float:
@@ -307,16 +319,43 @@ def _bench(n_u: int, n_v: int, nnz: int, clusters: int, k0: int,
           f"peak window p99 {base_peak:.1f}ms vs SLO {slo_ms:.1f}ms")
 
     # ---- the closed loop, twice: the second run must replay bit-for-bit
-    asc, src, sess, summary, counts = _closed_loop_run(
+    asc, src, sess, summary, counts, obs = _closed_loop_run(
         g, labels, parts_u, parts_v, k0, dcfg, bandwidth, scfg, slo_cfg,
         events, serve_cfg, n_slots)
-    asc2, src2, sess2, _, _ = _closed_loop_run(
+    asc2, src2, sess2, _, _, obs2 = _closed_loop_run(
         g, labels, parts_u, parts_v, k0, dcfg, bandwidth, scfg, slo_cfg,
         events, serve_cfg, n_slots)
     sig, sig2 = _signature(asc, src, sess), _signature(asc2, src2, sess2)
     for key in sig:
         assert sig[key] == sig2[key], \
             f"closed-loop replay is not bit-deterministic ({key} differ)"
+    # ... and so must the virtual-clock trace and the flight recorder
+    # (wall clocks and jit-cache evidence are excluded from the
+    # deterministic export by default)
+    assert chrome_trace_json(obs.tracer) == chrome_trace_json(obs2.tracer), \
+        "seeded replays exported different traces"
+    assert obs.recorder.to_json() == obs2.recorder.to_json(), \
+        "seeded replays recorded different event streams"
+
+    # ---- every violated post-warmup window must have a recorded cause
+    explanations = []
+    for i, (snap, _) in enumerate(asc.decisions):
+        if i < slo_cfg.warmup_windows or snap.p99_ms <= slo_ms:
+            continue
+        ex = obs.explain(i)
+        assert ex.attributed, (
+            f"window {i} violated the SLO (p99 {snap.p99_ms:.1f}ms > "
+            f"{slo_ms:.1f}ms) with no recorded cause in the flight "
+            f"recorder — explain() came back empty")
+        assert all(c["kind"] in CAUSE_KINDS for c in ex.causes), ex.causes
+        explanations.append(str(ex))
+    trace_path = pathlib.Path(__file__).resolve().parent / "out" / \
+        f"{name}_trace.json"
+    trace_path.parent.mkdir(exist_ok=True)
+    save_chrome_trace(obs.tracer, trace_path)
+    print(f"# obs: {len(obs.tracer.spans)} spans, {len(obs.recorder)} "
+          f"events, {len(explanations)} violated windows all attributed; "
+          f"trace -> {trace_path}")
 
     hold = _hold_frac(asc.decisions, slo_cfg.warmup_windows, slo_ms)
     shed = src.telemetry.shed_total
@@ -366,6 +405,9 @@ def _bench(n_u: int, n_v: int, nnz: int, clusters: int, k0: int,
         "examples_s": float(summary["examples_s"]),
         "baseline_examples_s": float(base_summary["examples_s"]),
         "deterministic": True,
+        "trace_spans": len(obs.tracer.spans),
+        "recorder_events": len(obs.recorder),
+        "violated_window_explanations": explanations,
     }, quick=quick)
 
     if min_hold_frac is not None:

@@ -113,7 +113,7 @@ def run_acceptance(n_u: int = 100_000, num_v: int = 65_536, k: int = 16,
     baseline = score(g, one_shot.parts_u, k)["traffic_max"]
     quality_pct = (streamed - baseline) / baseline * 100
     emit(rows, name)
-    emit_stream_bench(rows, meta={
+    emit_stream_bench(rows, quick=name.endswith("_quick"), meta={
         "graph": f"text_like({n_u}x{num_v})", "k": k, "chunks": chunks,
         "block_size": block, "mean_feed_s": mean_feed,
         "mean_scratch_s": mean_scratch, "speedup_vs_scratch": speedup,

@@ -1,0 +1,170 @@
+"""Bench regression gate: fresh quick-suite BENCH rows vs committed baselines.
+
+CI (the ``bench-regression`` job) copies the committed ``BENCH_pipeline.json``
+/ ``BENCH_system.json`` into a baseline directory, re-runs the quick suites
+(``python -m benchmarks.run --quick --only {stream,chaos,system,slo}``) so the
+repo-root files carry fresh ``*_quick`` sections, then runs::
+
+    python -m benchmarks.check_regression --baseline <dir>
+
+The gate compares only the ``*_quick`` sections (the acceptance sections are
+produced on dedicated boxes, not CI runners) and fails when any wall-clock
+ratio degrades by more than ``--band`` (default 25%) or any traffic metric
+grows by more than the same band.  Wall-clock metrics are compared as
+*ratios* (speedups, examples/s) rather than raw seconds so shared-runner
+noise cancels where both sides slow down together; traffic metrics are
+deterministic byte/assignment counts, so the band only forgives intentional
+small drifts — anything larger needs a baseline update.
+
+``schema_version`` must match on both sides — a version bump means keys were
+renamed/removed, and the checker refuses to mis-parse across that boundary.
+
+``--update-baseline`` copies the fresh repo-root files over the baseline dir
+(for refreshing a committed baseline after an intentional perf change).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+from .report import ROOT, SCHEMA_VERSION
+
+BENCH_FILES = ("BENCH_pipeline.json", "BENCH_system.json")
+
+# (file, section path, metric, direction) — direction is which way the
+# metric is allowed to move freely: "higher" metrics fail when the fresh
+# value drops below (1-band)x baseline, "lower" metrics fail when it rises
+# above (1+band)x.  A path element of -1 indexes the last row of a list.
+CHECKS = (
+    ("BENCH_pipeline.json", ("stream_meta_quick", "speedup_vs_scratch"),
+     "higher"),
+    ("BENCH_pipeline.json", ("stream_rows_quick", -1, "traffic_max"),
+     "lower"),
+    ("BENCH_pipeline.json", ("chaos_meta_quick", "repair_speedup"),
+     "higher"),
+    ("BENCH_pipeline.json", ("chaos_meta_quick", "migration_bytes_total"),
+     "lower"),
+    ("BENCH_pipeline.json", ("chaos_rows_quick", -1, "traffic_max"),
+     "lower"),
+    ("BENCH_system.json", ("meta_quick", "speedup_parsa_async_vs_random_sync"),
+     "higher"),
+    ("BENCH_system.json", ("meta_quick", "traffic_cut_pct"), "higher"),
+    ("BENCH_system.json", ("slo_meta_quick", "examples_s"), "higher"),
+    ("BENCH_system.json", ("slo_meta_quick", "shed_frac"), "lower"),
+)
+
+
+def _dig(payload, path):
+    cur = payload
+    for key in path:
+        try:
+            cur = cur[key]
+        except (KeyError, IndexError, TypeError):
+            return None
+    return cur if isinstance(cur, (int, float)) and not isinstance(
+        cur, bool) else None
+
+
+def _load(dir_path: pathlib.Path, name: str) -> dict | None:
+    path = dir_path / name
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def check(baseline_dir: pathlib.Path, fresh_dir: pathlib.Path = ROOT,
+          band: float = 0.25) -> tuple[list[str], list[str]]:
+    """Compare fresh quick sections vs the baseline.  Returns
+    (failures, notes); empty failures means the gate passes."""
+    failures: list[str] = []
+    notes: list[str] = []
+    payloads: dict[str, tuple[dict, dict]] = {}
+    for name in BENCH_FILES:
+        base, fresh = _load(baseline_dir, name), _load(fresh_dir, name)
+        if base is None or fresh is None:
+            failures.append(f"{name}: missing on "
+                            f"{'baseline' if base is None else 'fresh'} side")
+            continue
+        bv, fv = base.get("schema_version"), fresh.get("schema_version")
+        if fv != SCHEMA_VERSION:
+            failures.append(f"{name}: fresh schema_version {fv!r} != "
+                            f"checker's {SCHEMA_VERSION}")
+            continue
+        if bv != fv:
+            failures.append(f"{name}: baseline schema_version {bv!r} != "
+                            f"fresh {fv!r} — refusing cross-version compare "
+                            f"(update the baseline)")
+            continue
+        payloads[name] = (base, fresh)
+
+    compared = 0
+    for name, path, direction in CHECKS:
+        if name not in payloads:
+            continue
+        base, fresh = payloads[name]
+        label = f"{name}:{'.'.join(str(p) for p in path)}"
+        bval, fval = _dig(base, path), _dig(fresh, path)
+        if bval is None or fval is None:
+            notes.append(f"skip {label}: missing on "
+                         f"{'baseline' if bval is None else 'fresh'} side")
+            continue
+        compared += 1
+        if bval == 0:
+            notes.append(f"skip {label}: baseline is 0 (relative band "
+                         f"degenerate); fresh={fval:g}")
+            continue
+        ratio = fval / bval
+        ok = ratio >= 1 - band if direction == "higher" else ratio <= 1 + band
+        verdict = "ok" if ok else "FAIL"
+        line = (f"{verdict:4s} {label}: baseline {bval:g} -> fresh {fval:g} "
+                f"({ratio:.2f}x baseline, {direction} is better, "
+                f"band {band:.0%})")
+        notes.append(line)
+        if not ok:
+            failures.append(line)
+    if compared == 0 and not failures:
+        failures.append("no metrics compared — quick sections absent on "
+                        "both sides? run the quick suites first")
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", type=pathlib.Path,
+                    help="directory holding the baseline BENCH_*.json files")
+    ap.add_argument("--band", type=float, default=0.25,
+                    help="allowed fractional degradation (default 0.25)")
+    ap.add_argument("--update-baseline", type=pathlib.Path, default=None,
+                    metavar="DIR",
+                    help="copy the fresh repo-root BENCH files into DIR "
+                         "and exit (no comparison)")
+    args = ap.parse_args()
+
+    if args.update_baseline is not None:
+        args.update_baseline.mkdir(parents=True, exist_ok=True)
+        for name in BENCH_FILES:
+            src = ROOT / name
+            if src.exists():
+                shutil.copy2(src, args.update_baseline / name)
+                print(f"# baseline updated: {args.update_baseline / name}")
+        return 0
+
+    if args.baseline is None:
+        ap.error("--baseline is required (or use --update-baseline)")
+    failures, notes = check(args.baseline, band=args.band)
+    for line in notes:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} regression check(s) FAILED:")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    print("\nbench regression gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,12 @@ OUT = pathlib.Path(__file__).resolve().parent / "out"
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRY = OUT / "dryrun"
 
+# Version of the BENCH_*.json schemas, stamped by every emitter.  Bump on
+# any key *rename or removal* (keys are append-only by contract, so bumps
+# should be rare); consumers (check_regression.py, the PR driver) use it
+# to refuse cross-version comparisons instead of mis-parsing.
+SCHEMA_VERSION = 1
+
 
 def emit_parsa_bench(rows: list[dict], name: str = "BENCH_parsa",
                      meta: dict | None = None) -> pathlib.Path:
@@ -38,7 +44,8 @@ def emit_parsa_bench(rows: list[dict], name: str = "BENCH_parsa",
     """
     OUT.mkdir(exist_ok=True)
     path = OUT / f"{name}.json"
-    payload = {"benchmark": "parsa", **(meta or {}), "rows": rows}
+    payload = {"benchmark": "parsa", "schema_version": SCHEMA_VERSION,
+               **(meta or {}), "rows": rows}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {path}")
     return path
@@ -56,14 +63,17 @@ def emit_pipeline_bench(rows: list[dict],
     version control alongside the code that moved it; keys are append-only.
     """
     path = ROOT / "BENCH_pipeline.json"
-    payload = {"benchmark": "parsa_pipeline", **(meta or {}), "rows": rows}
+    payload = {"benchmark": "parsa_pipeline",
+               "schema_version": SCHEMA_VERSION, **(meta or {}),
+               "rows": rows}
     if path.exists():
         # preserve the streaming/chaos benchmark sections (written by
         # emit_stream_bench / emit_chaos_bench) — the emitters own
         # disjoint keys
         old = json.loads(path.read_text())
         for key in ("stream_rows", "stream_meta", "chaos_rows",
-                    "chaos_meta"):
+                    "chaos_meta", "stream_rows_quick", "stream_meta_quick",
+                    "chaos_rows_quick", "chaos_meta_quick"):
             if key in old:
                 payload.setdefault(key, old[key])
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
@@ -71,8 +81,8 @@ def emit_pipeline_bench(rows: list[dict],
     return path
 
 
-def emit_stream_bench(rows: list[dict],
-                      meta: dict | None = None) -> pathlib.Path:
+def emit_stream_bench(rows: list[dict], meta: dict | None = None,
+                      quick: bool = False) -> pathlib.Path:
     """Append the streaming benchmark's per-chunk rows to the repo-root
     ``BENCH_pipeline.json`` trajectory.
 
@@ -81,22 +91,26 @@ def emit_stream_bench(rows: list[dict],
     existing keys are preserved (append-only schema): stream rows land
     under ``stream_rows`` / ``stream_meta`` so re-runs replace rather than
     duplicate them, and a missing file is created with an empty pipeline
-    section.
+    section.  ``quick=True`` (CI-scale run) lands under
+    ``stream_rows_quick`` / ``stream_meta_quick`` so a smoke run never
+    clobbers the acceptance numbers.
     """
     path = ROOT / "BENCH_pipeline.json"
     if path.exists():
         payload = json.loads(path.read_text())
     else:
         payload = {"benchmark": "parsa_pipeline", "rows": []}
-    payload["stream_rows"] = rows
-    payload["stream_meta"] = meta or {}
+    payload["schema_version"] = SCHEMA_VERSION
+    suffix = "_quick" if quick else ""
+    payload[f"stream_rows{suffix}"] = rows
+    payload[f"stream_meta{suffix}"] = meta or {}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"# wrote {path} (+{len(rows)} stream rows)")
+    print(f"# wrote {path} (+{len(rows)} stream rows{suffix or ''})")
     return path
 
 
-def emit_chaos_bench(rows: list[dict],
-                     meta: dict | None = None) -> pathlib.Path:
+def emit_chaos_bench(rows: list[dict], meta: dict | None = None,
+                     quick: bool = False) -> pathlib.Path:
     """Append the elastic chaos benchmark's per-feed rows to the repo-root
     ``BENCH_pipeline.json`` trajectory.
 
@@ -105,17 +119,21 @@ def emit_chaos_bench(rows: list[dict],
     warm-repair vs cold-repartition wall clocks and the final quality gap
     vs the oracle static partition.  Existing keys (pipeline, stream) are
     preserved — chaos rows land under ``chaos_rows`` / ``chaos_meta`` so
-    re-runs replace rather than duplicate them.
+    re-runs replace rather than duplicate them.  ``quick=True`` lands
+    under ``chaos_rows_quick`` / ``chaos_meta_quick`` so a smoke run
+    never clobbers the acceptance numbers.
     """
     path = ROOT / "BENCH_pipeline.json"
     if path.exists():
         payload = json.loads(path.read_text())
     else:
         payload = {"benchmark": "parsa_pipeline", "rows": []}
-    payload["chaos_rows"] = rows
-    payload["chaos_meta"] = meta or {}
+    payload["schema_version"] = SCHEMA_VERSION
+    suffix = "_quick" if quick else ""
+    payload[f"chaos_rows{suffix}"] = rows
+    payload[f"chaos_meta{suffix}"] = meta or {}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"# wrote {path} (+{len(rows)} chaos rows)")
+    print(f"# wrote {path} (+{len(rows)} chaos rows{suffix or ''})")
     return path
 
 
@@ -154,6 +172,7 @@ def emit_system_bench(rows: list[dict], meta: dict | None = None,
         payload = json.loads(path.read_text())
     else:
         payload = {"benchmark": "parsa_system"}
+    payload["schema_version"] = SCHEMA_VERSION
     suffix = "_quick" if quick else ""
     payload[f"rows{suffix}"] = rows
     payload[f"meta{suffix}"] = meta or {}
@@ -199,12 +218,84 @@ def emit_slo_bench(rows: list[dict], meta: dict | None = None,
         payload = json.loads(path.read_text())
     else:
         payload = {"benchmark": "parsa_system"}
+    payload["schema_version"] = SCHEMA_VERSION
     suffix = "_quick" if quick else ""
     payload[f"slo_rows{suffix}"] = rows
     payload[f"slo_meta{suffix}"] = meta or {}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {path} (+{len(rows)} slo rows{suffix or ''})")
     return path
+
+
+def validate_bench_files(tmp_dir: str | pathlib.Path | None = None) -> dict:
+    """Round-trip every BENCH emitter against a scratch directory and assert
+    the append-only contract: each emitter must preserve every other
+    emitter's keys, and every payload must carry ``schema_version``.
+
+    Runs against a temp dir (never the real trajectory files).  Returns the
+    final payloads keyed by file name so callers/tests can inspect them.
+    Raises ``AssertionError`` on any contract violation.
+    """
+    import contextlib
+    import io
+    import tempfile
+
+    global OUT, ROOT
+    ctx = tempfile.TemporaryDirectory() if tmp_dir is None else None
+    base = pathlib.Path(ctx.name if ctx is not None else tmp_dir)
+    saved_out, saved_root = OUT, ROOT
+    OUT, ROOT = base / "out", base
+    try:
+        row = {"probe": 1.0}
+        meta = {"probe_meta": "x"}
+        with contextlib.redirect_stdout(io.StringIO()):
+            # BENCH_pipeline.json: four emitters share one file.  Write the
+            # section-owners first, then re-emit the pipeline rows — the
+            # preserve-keys loop must keep every section alive.
+            emit_stream_bench([row], meta)
+            emit_stream_bench([row], meta, quick=True)
+            emit_chaos_bench([row], meta)
+            emit_chaos_bench([row], meta, quick=True)
+            emit_pipeline_bench([row], meta)
+            # BENCH_system.json: system + slo emitters, full and quick.
+            emit_system_bench([row], meta)
+            emit_system_bench([row], meta, quick=True)
+            emit_slo_bench([row], meta)
+            emit_slo_bench([row], meta, quick=True)
+            emit_parsa_bench([row], meta=meta)
+        pipeline = json.loads((ROOT / "BENCH_pipeline.json").read_text())
+        system = json.loads((ROOT / "BENCH_system.json").read_text())
+        parsa = json.loads((OUT / "BENCH_parsa.json").read_text())
+        expect_pipeline = {
+            "benchmark", "schema_version", "rows", "probe_meta",
+            "stream_rows", "stream_meta", "stream_rows_quick",
+            "stream_meta_quick", "chaos_rows", "chaos_meta",
+            "chaos_rows_quick", "chaos_meta_quick",
+        }
+        missing = expect_pipeline - set(pipeline)
+        assert not missing, f"BENCH_pipeline.json dropped keys: {sorted(missing)}"
+        expect_system = {
+            "benchmark", "schema_version", "rows", "meta", "rows_quick",
+            "meta_quick", "slo_rows", "slo_meta", "slo_rows_quick",
+            "slo_meta_quick",
+        }
+        missing = expect_system - set(system)
+        assert not missing, f"BENCH_system.json dropped keys: {sorted(missing)}"
+        for name, payload in (("BENCH_pipeline.json", pipeline),
+                              ("BENCH_system.json", system),
+                              ("BENCH_parsa.json", parsa)):
+            assert payload.get("schema_version") == SCHEMA_VERSION, \
+                f"{name} missing/stale schema_version: {payload.get('schema_version')!r}"
+        assert pipeline["stream_rows"] == [row]
+        assert system["slo_rows_quick"] == [row]
+        assert parsa["rows"] == [row]
+        return {"BENCH_pipeline.json": pipeline,
+                "BENCH_system.json": system,
+                "BENCH_parsa.json": parsa}
+    finally:
+        OUT, ROOT = saved_out, saved_root
+        if ctx is not None:
+            ctx.cleanup()
 
 
 def pipeline_phase_rows(res, backend: str, refine_backend: str) -> list[dict]:

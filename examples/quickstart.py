@@ -13,6 +13,9 @@ worker partitioner (``parallel_device``); nothing else changes.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+import pathlib
+
 import jax
 import numpy as np
 
@@ -260,7 +263,7 @@ print("(full {random,parsa} x {sync,async} grid with acceptance gates: "
 # repair immediately on circuit-open, straggler-bias the router on EWMA
 # drift.  Under overload the engine degrades gracefully instead of falling
 # over: per-home admission control sheds lowest-weight tenants first.
-from repro.api import SLOAutoscaler, SLOConfig
+from repro.api import Observability, SLOAutoscaler, SLOConfig, prometheus_text
 from repro.runtime import RetryPolicy
 
 print("\nclosed loop: a load burst + a machine kill, static k=8 vs "
@@ -285,7 +288,8 @@ for name, autoscale in [("static k=8", False), ("autoscaled", True)]:
                         bandwidth=serve_kw["bandwidth"])
     cluster.commit_weights(np.random.default_rng(1).normal(
         0, 0.1, g_srv.num_v).astype(np.float32))
-    asc = SLOAutoscaler(slo_cfg)
+    obs = Observability() if autoscale else None   # traced pass, see below
+    asc = SLOAutoscaler(dataclasses.replace(slo_cfg, obs=obs))
     elastic = None
     if autoscale:
         elastic = ElasticSession(ElasticConfig(
@@ -300,10 +304,12 @@ for name, autoscale in [("static k=8", False), ("autoscaled", True)]:
     src = PSRequestSource(
         cluster, mix,
         ServingConfig(max_backlog_s=0.025 if autoscale else None,
-                      tau_escalation=slo_cfg.tau_escalation, **serve_kw),
+                      tau_escalation=slo_cfg.tau_escalation, obs=obs,
+                      **serve_kw),
         chaos=ChaosSchedule(list(chaos_events), seed=0),
         elastic=elastic, autoscaler=asc)
-    s = ServingEngine(src).run(256)
+    engine = ServingEngine(src)
+    s = engine.run(256)
     windows = asc.decisions[slo_cfg.warmup_windows:]
     hold = sum(snap.p99_ms <= SLO_MS for snap, _ in windows) / len(windows)
     peak = max(snap.p99_ms for snap, _ in windows)
@@ -316,3 +322,41 @@ for name, autoscale in [("static k=8", False), ("autoscaled", True)]:
 print("(every decision is recorded with its telemetry snapshot and the "
       "seeded chaos replay is bit-deterministic; acceptance gates: "
       "benchmarks/bench_slo.py --acceptance -> BENCH_system.json slo_rows)")
+
+# --------------------------------------------------------------------------
+# observability: the autoscaled run above was fully traced (repro.obs).
+# One Observability handle threads through every layer as the single obs=
+# hook (ServingConfig.obs / SLOConfig.obs / StreamSession / ElasticSession):
+# the tracer emits nested virtual-clock spans (request -> pull/wire/retry/
+# queue -> compute -> push, elastic ops -> plan/scan/migrate, feeds ->
+# pack/scan/merge) on the same deterministic clock the engine models, and
+# the flight recorder correlates chaos events, window verdicts, breaker
+# trips and elastic ops on one slot timeline — so recorder.explain(window)
+# answers "WHY did this window violate the SLO" from the recording alone.
+# Off by default: with obs=None every hook is a single attribute check.
+out_dir = pathlib.Path(__file__).resolve().parent / "out"
+paths = obs.save(out_dir, prefix="quickstart")
+print(f"\nobservability: {len(obs.tracer.spans)} virtual-clock spans, "
+      f"{len(obs.recorder)} recorded facts from the autoscaled run")
+print(f"  Perfetto trace -> {paths['trace']}  (open in ui.perfetto.dev)")
+print(f"  flight recorder -> {paths['events']}")
+
+violated = [i for i, (snap, _) in enumerate(asc.decisions)
+            if i >= slo_cfg.warmup_windows and snap.p99_ms > SLO_MS]
+print(f"  {len(violated)} post-warmup windows violated the SLO; "
+      f"asking the flight recorder why:")
+for i in violated[:2]:
+    print("    " + str(obs.explain(i)).replace("\n", "\n    "))
+
+metrics = prometheus_text(latency=engine.recorder, telemetry=src.telemetry,
+                          traffic=elastic.traffic, meter=cluster.meter)
+lines = metrics.splitlines()
+n_fams = sum(ln.startswith("# TYPE") for ln in lines)
+n_samples = sum(bool(ln) and not ln.startswith("#") for ln in lines)
+print(f"  prometheus snapshot: {n_samples} samples across {n_fams} "
+      f"metric families, e.g.")
+for ln in lines:
+    if ln.startswith("parsa_telemetry_p99_ms"):
+        print(f"    {ln}")
+print("(the seeded replay exports byte-identical traces and event streams "
+      "— gated in tests/test_obs.py and benchmarks/bench_slo.py)")

@@ -83,6 +83,15 @@ __all__ = [
     "TelemetryBus",
     "TelemetrySnapshot",
     "ZipfWorkload",
+    # observability surface (lazy — see __getattr__)
+    "Observability",
+    "Tracer",
+    "FlightRecorder",
+    "Explanation",
+    "to_chrome_trace",
+    "chrome_trace_json",
+    "save_chrome_trace",
+    "prometheus_text",
 ]
 
 # Streaming lives in ``repro.stream`` (online incremental Parsa over
@@ -106,6 +115,12 @@ _SERVING_EXPORTS = ("PSRequestSource", "RequestMix", "ServingConfig",
                     "ServingEngine", "TelemetryBus", "TelemetrySnapshot",
                     "ZipfWorkload")
 
+# Observability (``repro.obs``: virtual-clock tracing, flight recorder,
+# Perfetto/Prometheus export) — the ``obs=`` hook's types.
+_OBS_EXPORTS = ("Observability", "Tracer", "FlightRecorder", "Explanation",
+                "to_chrome_trace", "chrome_trace_json", "save_chrome_trace",
+                "prometheus_text")
+
 
 def __getattr__(name: str):
     if name in _STREAM_EXPORTS:
@@ -120,6 +135,10 @@ def __getattr__(name: str):
         from . import serving
 
         return getattr(serving, name)
+    if name in _OBS_EXPORTS:
+        from . import obs
+
+        return getattr(obs, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 _SELECTS = ("size", "footprint")

@@ -62,6 +62,7 @@ union-push (server line 9), with τ == merge_every − 1 blocks of staleness.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import functools
 import time
 import warnings
@@ -70,6 +71,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import trace as _obs_trace
 
 from ..kernels.parsa_cost import (
     BIG,
@@ -94,6 +97,9 @@ __all__ = [
     "PackedBlocks",
     "dispatch_counter",
     "reset_dispatch_counts",
+    "annotate_dispatch",
+    "DispatchEvent",
+    "DispatchLog",
     "resolve_worker_devices",
 ]
 
@@ -103,19 +109,64 @@ __all__ = [
 # tests/test_jax_partition.py).  Counts are observed through the
 # ``dispatch_counter()`` context manager so concurrent tests can't leak
 # counts into each other the way the old module-global dict did.
-_ACTIVE_COUNTERS: list[dict[str, int]] = []
 
 
-def _count_dispatch(name: str) -> None:
+@dataclasses.dataclass
+class DispatchEvent:
+    """One labeled pipeline launch: phase, donated-carry bytes, extras
+    (jit cache hit/miss, worker id, ...)."""
+
+    phase: str
+    nbytes: int = 0
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+class DispatchLog(dict):
+    """The dict ``dispatch_counter`` yields, upgraded with labeled
+    per-launch records.
+
+    Still a plain ``phase -> count`` mapping (every existing
+    ``counts["partition_scan"] == 1`` / ``counts == {...}`` assert keeps
+    working); ``.records`` carries the ordered ``DispatchEvent`` stream
+    behind those totals."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.records: list[DispatchEvent] = []
+
+    def bytes_by_phase(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for r in self.records:
+            out[r.phase] = out.get(r.phase, 0) + r.nbytes
+        return out
+
+
+_ACTIVE_COUNTERS: list[DispatchLog] = []
+
+
+def _count_dispatch(name: str, nbytes: int = 0, **meta) -> None:
     for counts in _ACTIVE_COUNTERS:
         counts[name] = counts.get(name, 0) + 1
+        counts.records.append(DispatchEvent(name, int(nbytes),
+                                            dict(meta)))
+    _obs_trace.dispatch_instant(name, nbytes=nbytes, meta=meta or None)
+
+
+def annotate_dispatch(**meta) -> None:
+    """Attach after-the-fact labels (jit ``cache_miss`` is only knowable
+    once the call returns) to the launch just counted."""
+    for counts in _ACTIVE_COUNTERS:
+        if counts.records:
+            counts.records[-1].meta.update(meta)
+    _obs_trace.annotate_last_instant(**meta)
 
 
 @contextlib.contextmanager
 def dispatch_counter():
-    """Yield a fresh ``{"partition_scan": 0, ...}`` dict that records only
-    the pipeline launches issued inside this ``with`` block."""
-    counts: dict[str, int] = {"partition_scan": 0}
+    """Yield a fresh ``{"partition_scan": 0, ...}`` log (a dict subclass;
+    see ``DispatchLog``) that records only the pipeline launches issued
+    inside this ``with`` block."""
+    counts = DispatchLog({"partition_scan": 0})
     _ACTIVE_COUNTERS.append(counts)
     try:
         yield counts
@@ -133,6 +184,7 @@ def reset_dispatch_counts() -> None:
     for counts in _ACTIVE_COUNTERS:
         for key in counts:
             counts[key] = 0
+        counts.records.clear()
 
 
 class PackedBlocks(NamedTuple):
@@ -519,7 +571,9 @@ def blocked_partition_u_impl(
     packed = pack_graph_blocks(graph, block, order=order, cap=cap)
     if timings is not None:
         timings["pack"] = time.perf_counter() - t_pack
-    _count_dispatch("partition_scan")
+    _count_dispatch("partition_scan",
+                    nbytes=int(s_masks.nbytes) + int(sizes.nbytes),
+                    k=k, blocks=int(packed.valid.shape[0]))
     parts_blocks, s_out, _ = _partition_scan(
         jnp.asarray(packed.valid), jnp.asarray(packed.widx),
         jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
@@ -840,7 +894,9 @@ def _run_parallel_packed_scan(
 
     fn = _parallel_scan_fn(devices, k, merge_every, use_kernel, interpret,
                            sketch)
-    _count_dispatch(count_name)
+    _count_dispatch(count_name,
+                    nbytes=int(s_masks.nbytes) + int(sizes.nbytes),
+                    k=k, workers=workers, blocks=nb_per * workers)
     parts_blocks, s_out, sizes_out, pushed_words = fn(
         shard(packed.valid), shard(packed.widx), shard(packed.vals),
         shard(packed.trunc), shard(packed.tr_ids), shard(packed.tr_masks),

@@ -64,6 +64,10 @@ class SLOConfig:
     max_k: int = 64
     drift_ratio: float = 2.0         # slowest/mean speed gap → rebalance
     tau_escalation: int = 8          # engine slots of widened staleness
+    # observability hook (repro.obs.Observability); excluded from
+    # equality/hash so configs stay comparable and frozen-hashable
+    obs: object = dataclasses.field(default=None, compare=False,
+                                    repr=False)
 
     def __post_init__(self):
         if self.slo_ms <= 0:
@@ -110,6 +114,7 @@ class SLOAutoscaler:
 
     def __init__(self, config: SLOConfig):
         self.config = config
+        self.obs = config.obs
         self.decisions: list[tuple[object, AutoscaleDecision]] = []
         self.repairs: list[tuple[object, int]] = []
         self._hot = 0          # consecutive over-SLO windows
@@ -205,4 +210,10 @@ class SLOAutoscaler:
                     reason=f"slowest machine at "
                            f"{min(snap.speeds):.2f}x mean speed")
         self.decisions.append((snap, decision))
+        if self.obs is not None:
+            self.obs.record(
+                "decision", step=snap.step,
+                window=len(self.decisions) - 1, action=decision.action,
+                target=decision.target, reason=decision.reason,
+                p99_ms=float(snap.p99_ms), k=snap.k)
         return decision

@@ -119,7 +119,7 @@ class ElasticSession:
 
     def __init__(self, config: ElasticConfig, num_v: int,
                  policy: ElasticPolicy | None = None,
-                 chaos: ChaosSchedule | None = None):
+                 chaos: ChaosSchedule | None = None, obs=None):
         self.config = config
         self.stream = StreamSession(config.stream, num_v)
         self.policy = policy if policy is not None else ThresholdPolicy(
@@ -133,6 +133,41 @@ class ElasticSession:
         self._straggle = np.ones(workers, np.float64)
         self.ops: list[ElasticOp] = []
         self._n_ops = 0
+        self._obs = None
+        if obs is not None:
+            self.obs = obs
+
+    # ------------------------------------------------------ observability
+    @property
+    def obs(self):
+        return self._obs
+
+    @obs.setter
+    def obs(self, value) -> None:
+        # one hook covers the stack: the stream under this session traces
+        # its feeds into the same sinks
+        self._obs = value
+        self.stream.obs = value
+
+    def _finish_op(self, op: ElasticOp) -> ElasticOp:
+        """Book one op: append to the audit trail and (with obs attached)
+        emit the ``elastic_op → plan/scan/migrate`` span.  Child offsets
+        are fixed fractions of a 1.0 virtual unit — host-side phases have
+        no modeled duration, and fixed fractions keep seeded replays
+        byte-identical; the measured seconds ride in ``wall_s``."""
+        self.ops.append(op)
+        if self._obs is not None:
+            tr = self._obs.tracer
+            sp = tr.begin("elastic_op", v_start=tr.now, v_dur=1.0,
+                          track="elastic", kind=op.kind,
+                          committed=op.committed, machine=op.machine,
+                          k_before=op.k_before, k_after=op.k_after,
+                          mode=op.mode, wall_s=op.seconds)
+            sp.child("plan", 0.0, 0.4, moved_u=int(op.moved_u))
+            sp.child("scan", 0.4, 0.4)
+            sp.child("migrate", 0.8, 0.2,
+                     migration_bytes=int(op.traffic.migration_bytes))
+        return op
 
     # --------------------------------------------------------- delegation
     @property
@@ -239,7 +274,7 @@ class ElasticSession:
         if rows.size < 2:
             op = ElasticOp("grow", False, k, k, src, TrafficCounters(),
                            0, 0, time.perf_counter() - t0)
-            self.ops.append(op)
+            self._finish_op(op)
             return op
         g = arena.graph()
         sub_indptr, counts, sub_indices = self._sub_csr(g, rows)
@@ -253,7 +288,9 @@ class ElasticSession:
                                    tb_pad=self.config.stream.tb_pad)
         import jax.numpy as jnp
 
-        _count_dispatch("elastic_grow_scan")
+        _count_dispatch("elastic_grow_scan",
+                        nbytes=int(packed.valid.nbytes), rows=int(rows.size),
+                        machine=int(src))
         parts2, m2, _ = _partition_scan(
             jnp.asarray(packed.valid), jnp.asarray(packed.widx),
             jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
@@ -291,7 +328,7 @@ class ElasticSession:
                                             migration_bytes=migration),
                        savings, int(moved.size),
                        time.perf_counter() - t0, partner=k)
-        self.ops.append(op)
+        self._finish_op(op)
         return op
 
     # ---------------------------------------------------------- shrink
@@ -305,7 +342,7 @@ class ElasticSession:
         if k <= max(1, self.config.min_k - 1) or k <= 1:
             op = ElasticOp("shrink", False, k, k, -1, TrafficCounters(),
                            0, 0, time.perf_counter() - t0)
-            self.ops.append(op)
+            self._finish_op(op)
             return op
         parts = self.parts
         sizes = np.bincount(parts, minlength=k)
@@ -343,7 +380,7 @@ class ElasticSession:
                                           migration_bytes=migration),
                        savings, int(moved_rows.size),
                        time.perf_counter() - t0, partner=j)
-        self.ops.append(op)
+        self._finish_op(op)
         return op
 
     # ---------------------------------------------------------- repair
@@ -368,7 +405,7 @@ class ElasticSession:
             op = ElasticOp("repair", True, k, k, machine, plan.traffic,
                            0, plan.moved_u, time.perf_counter() - t0,
                            mode="cold")
-            self.ops.append(op)
+            self._finish_op(op)
             return op
 
         import jax.numpy as jnp
@@ -389,7 +426,7 @@ class ElasticSession:
             op = ElasticOp("repair", True, k, k, machine,
                            TrafficCounters(tasks=1), 0, 0,
                            time.perf_counter() - t0, mode="warm")
-            self.ops.append(op)
+            self._finish_op(op)
             return op
         g = arena.graph()
         sub_indptr, counts, sub_indices = self._sub_csr(g, rows)
@@ -412,7 +449,9 @@ class ElasticSession:
         packed = pack_graph_blocks(g_cap, base.block_size, order=order,
                                    cap=base.cap,
                                    tb_pad=self.config.stream.tb_pad)
-        _count_dispatch("elastic_repair_scan")
+        _count_dispatch("elastic_repair_scan",
+                        nbytes=int(packed.valid.nbytes), rows=int(rows.size),
+                        machine=int(machine))
         parts_sub, s_out, sz_out = _partition_scan(
             jnp.asarray(packed.valid), jnp.asarray(packed.widx),
             jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
@@ -439,7 +478,7 @@ class ElasticSession:
                        TrafficCounters(tasks=1, migration_bytes=acquired),
                        0, int(rows.size), time.perf_counter() - t0,
                        mode="warm")
-        self.ops.append(op)
+        self._finish_op(op)
         return op
 
     # ---------------------------------------------------------- PS bridge

@@ -31,6 +31,7 @@ import numpy as np
 
 from ..core.bipartite import BipartiteGraph
 from ..core.costs import need_matrix
+from ..obs.trace import trace_instant
 from .dbpg import DBPGConfig, kkt_filter, prox_step, quantize_int8, dequantize_int8
 from .lr import SparseBatch, lr_grad, lr_objective
 
@@ -326,8 +327,11 @@ class PSCluster:
         w_host = np.asarray(self.w)
         delta = need & (w_host != self._pull_cache[worker])
         src_bytes = np.bincount(self.owner[delta], minlength=self.k) * 4
-        return PullPlan(worker=worker, need=need, delta=delta,
+        plan = PullPlan(worker=worker, need=need, delta=delta,
                         src_bytes=src_bytes.astype(np.int64))
+        trace_instant("ps.plan_pull", worker=worker,
+                      nbytes=int(plan.total_bytes))
+        return plan
 
     def pull_nowait(self, plan: PullPlan, exclude: frozenset = frozenset(),
                     wire_s: float = 0.0, wait_s: float = 0.0,
@@ -365,6 +369,9 @@ class PSCluster:
         # snapshot before the device transfer: later cache mutations (the
         # next pull) must not alias into a buffer still being computed on
         buffer = jnp.asarray(cache.copy())
+        trace_instant("ps.pull_nowait", worker=worker,
+                      fresh=int(fetch.sum()), stale=stale_entries,
+                      inter_bytes=inter)
         return PullHandle(
             worker=worker, issued_at=time.perf_counter(),
             wire_s=float(wire_s), wait_s=float(wait_s),

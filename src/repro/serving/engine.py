@@ -61,7 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.jax_partition import _count_dispatch
+from ..core.jax_partition import _count_dispatch, annotate_dispatch
 from ..ml.dbpg import soft_threshold
 from ..ml.lr import SparseBatch, lr_grad, _margins
 from ..ml.ps import PSCluster
@@ -124,6 +124,11 @@ class ServingConfig:
     breaker_cooldown_s: float = 0.05    # circuit half-open probe delay
     breaker_max_cooldown_s: float = 2.0  # decorrelated-jitter backoff cap
     window_requests: int | None = None  # recorder sliding-window size
+    # observability hook (repro.obs.Observability); None = off — every
+    # instrumented site is behind an `obs is None` check.  Excluded from
+    # equality/hash so the frozen config stays comparable.
+    obs: object = dataclasses.field(default=None, compare=False,
+                                    repr=False)
 
 
 @dataclasses.dataclass
@@ -191,12 +196,20 @@ class PSRequestSource:
                 cluster.k,
                 window_requests=autoscaler.config.window_requests)
         self.telemetry: TelemetryBus | None = telemetry
+        obs = self.config.obs
+        if obs is None and autoscaler is not None:
+            obs = getattr(autoscaler.config, "obs", None)
+        self.obs = obs
+        if obs is not None and elastic is not None:
+            elastic.obs = obs   # one hook covers the whole closed loop
 
     # ----------------------------------------------------------- chaos
     def on_step(self, t: int) -> None:
         # the virtual clock: requests arrive every service_model_s, full
         # stop — nothing downstream of a decision reads the wall clock
         self.vtime = t * self.config.service_model_s
+        if self.obs is not None:
+            self.obs.tracer.set_time(self.vtime)
         if self.chaos is None:
             return
         for ev in self.chaos.at(t):
@@ -215,6 +228,7 @@ class PSRequestSource:
                 self.dead.discard(m)
                 self.suspect.discard(m)
                 self.breaker.reset(m)
+                self._record_op(op, t)
             else:
                 # closed loop (or no elastic): the controller discovers
                 # the loss through its own circuit breaker and repairs
@@ -224,6 +238,7 @@ class PSRequestSource:
                 op = self.elastic.grow_k(force=True)
                 self._sync_placement(op)
                 self._sync_fleet()
+                self._record_op(op, t)
         elif ev.kind == "straggle":
             self.straggle[ev.machine % k] = ev.factor
         elif ev.kind == "recover":
@@ -235,8 +250,32 @@ class PSRequestSource:
             # real fleet has (nobody tells serving the shard came back)
         elif ev.kind == "burst":
             self.load_factor = float(ev.factor)
-        self.events.append((t, ev.kind, -1 if ev.machine is None
-                            else ev.machine % max(k, 1)))
+        m = -1 if ev.machine is None else ev.machine % max(k, 1)
+        self.events.append((t, ev.kind, m))
+        if self.obs is not None:
+            self.obs.record(
+                "chaos", step=t, v=self.vtime,
+                data={"kind": ev.kind,
+                      "machine": None if ev.machine is None else m,
+                      "factor": getattr(ev, "factor", None)})
+
+    def _record_op(self, op, t: int) -> None:
+        """Put one elastic op on the flight-recorder timeline, with its
+        triggering telemetry snapshot when the closed loop supplied one."""
+        if self.obs is None or op is None:
+            return
+        traffic = getattr(op, "traffic", None)
+        data = {"kind": op.kind, "committed": bool(op.committed),
+                "machine": op.machine, "k_before": op.k_before,
+                "k_after": op.k_after, "moved_u": int(op.moved_u),
+                "mode": op.mode,
+                "migration_bytes": (int(traffic.migration_bytes)
+                                    if traffic is not None else 0)}
+        snap = getattr(op, "telemetry", None)
+        if snap is not None:
+            data["trigger_p99_ms"] = float(snap.p99_ms)
+            data["trigger_step"] = int(snap.step)
+        self.obs.record("elastic_op", step=t, v=self.vtime, data=data)
 
     def _sync_fleet(self) -> None:
         k = self.cluster.k
@@ -321,9 +360,36 @@ class PSRequestSource:
     def note_shed(self, req: Request) -> None:
         if self.telemetry is not None:
             self.telemetry.observe_shed(req.tenant)
+        if self.obs is not None:
+            step = int(round(self.vtime / self.config.service_model_s))
+            self.obs.record(
+                "shed", step=step, v=self.vtime, tenant=req.tenant,
+                home=req.home,
+                backlog_s=float(self.vlink.backlog(req.home, self.vtime)))
 
     def issue(self, req: Request, t: int):
-        """Price and issue the request's pull; returns a ``PullHandle``."""
+        """Price and issue the request's pull; returns a ``PullHandle``.
+
+        With obs attached, opens the ``request`` root span (pushed on the
+        tracer stack so the PS/dispatch instants emitted inside nest under
+        it); the span's children are finalized retrospectively in
+        ``ServingEngine._serve_one`` from the handle's modeled breakdown.
+        """
+        if self.obs is None:
+            return self._issue(req, t)
+        tracer = self.obs.tracer
+        sp = tracer.begin("request", v_start=self.vtime,
+                          track=f"home{req.home}", tenant=req.tenant,
+                          step=t, examples=req.examples)
+        tracer.push(sp)
+        try:
+            handle = self._issue(req, t)
+        finally:
+            tracer.pop()
+        handle._span = sp
+        return handle
+
+    def _issue(self, req: Request, t: int):
         plan = self.cluster.plan_pull(req.home, need=req.need)
         secs = self.bw.per_source(plan.src_bytes, req.home, self.straggle)
         retry = self.config.retry
@@ -347,8 +413,15 @@ class PSRequestSource:
             link_s = float("inf") if j in self.dead else float(secs[j])
             delivered, spent = retry.admit(link_s)
             penalty = max(penalty, spent)
+            was_open = (self.obs is not None
+                        and self.breaker.state(j) != "closed")
             newly_opened = self.breaker.record(j, delivered, vnow)
+            if newly_opened and self.obs is not None:
+                self.obs.record("breaker_open", step=t, v=vnow, machine=j)
             if delivered:
+                if was_open:
+                    self.obs.record("breaker_close", step=t, v=vnow,
+                                    machine=j)
                 self.suspect.discard(j)
                 if plan.src_bytes[j] > 0:
                     # observed delivery slowdown vs the bytes/bandwidth
@@ -374,7 +447,8 @@ class PSRequestSource:
         # previous pull) pushes this transfer's completion out for real
         now = time.perf_counter()
         done = self.link.acquire(req.home, now, wire)
-        _count_dispatch("serving_pull")
+        _count_dispatch("serving_pull", nbytes=int(plan.total_bytes),
+                        home=req.home)
         handle = self.cluster.pull_nowait(plan, frozenset(exclude),
                                           wire_s=wire, wait_s=penalty,
                                           queue_s=done - now - wire)
@@ -420,6 +494,7 @@ class PSRequestSource:
                 op = self.elastic.repair(m)
                 op.telemetry = snap
                 self._commit_op(op, t)
+                self._record_op(op, t)
                 self.breaker.reset(m)
                 self.suspect.discard(m)
                 self.dead.discard(m)
@@ -432,28 +507,48 @@ class PSRequestSource:
             return
         snap = self._snapshot(t)
         decision = self.autoscaler.decide(snap)
+        if self.obs is not None:
+            slo = getattr(self.autoscaler.config, "slo_ms", None)
+            self.obs.record(
+                "window", step=t, v=self.vtime,
+                window=len(self.autoscaler.decisions) - 1,
+                p99_ms=float(snap.p99_ms),
+                slo_ms=None if slo is None else float(slo),
+                within=(slo is None or snap.p99_ms <= slo),
+                action=decision.action, reason=decision.reason,
+                k=int(snap.k), load_factor=float(snap.load_factor))
         if decision.action == "grow" and self.elastic is not None:
             self.autoscaler.approve("grow")
             op = self.elastic.grow_k(target=decision.target)
             op.telemetry = snap
             if op.committed:
                 self._commit_op(op, t)
+            self._record_op(op, t)
         elif decision.action == "shrink" and self.elastic is not None:
             self.autoscaler.approve("shrink")
             op = self.elastic.shrink_k()
             op.telemetry = snap
             if op.committed:
                 self._commit_op(op, t)
+            self._record_op(op, t)
         elif decision.action == "rebalance":
             self.router.set_weights(np.asarray(snap.speeds))
 
     # --------------------------------------------------------- serving
     def compute(self, req: Request, payload: jax.Array):
         cfg = self.cluster.cfg
-        _count_dispatch("serving_compute")
-        return _serve_step(req.batch, payload, jnp.asarray(req.need),
-                           lr=cfg.lr, lam=cfg.lam,
-                           update=self.config.update)
+        _count_dispatch("serving_compute", nbytes=int(payload.nbytes),
+                        tokens=req.tokens)
+        cache_size = getattr(_serve_step, "_cache_size", None)
+        before = cache_size() if cache_size is not None else None
+        out = _serve_step(req.batch, payload, jnp.asarray(req.need),
+                          lr=cfg.lr, lam=cfg.lam,
+                          update=self.config.update)
+        if before is not None:
+            # a grown jit cache means this pad bucket compiled fresh —
+            # the label that separates steady-state from compile stalls
+            annotate_dispatch(cache_miss=cache_size() > before)
+        return out
 
     def commit(self, req: Request, out, t: int) -> dict:
         new_w, g, loss = out
@@ -500,6 +595,8 @@ class ServingEngine:
         self.recorder = LatencyRecorder(
             window_requests=getattr(src_cfg, "window_requests", None))
         self.overlap = OverlapMeter()
+        self.obs = (getattr(source, "obs", None)
+                    or getattr(src_cfg, "obs", None))
 
     def _produce(self, t):
         """Generate + admit + issue slot ``t``; ``None`` when shed."""
@@ -516,6 +613,15 @@ class ServingEngine:
         return (req, src.issue(req, t))
 
     def run(self, num_requests: int) -> dict:
+        if self.obs is None:
+            return self._run_loop(num_requests)
+        # installed for the run: the deep layers (PS pulls, router
+        # refreshes, dispatches) emit instants into this tracer without
+        # holding a reference to it
+        with self.obs.tracer.installed():
+            return self._run_loop(num_requests)
+
+    def _run_loop(self, num_requests: int) -> dict:
         rec, meter = self.recorder, self.overlap
         src = self.source
         after = getattr(src, "after_slot", None)
@@ -582,6 +688,37 @@ class ServingEngine:
         observe = getattr(src, "observe_request", None)
         if observe is not None:
             observe(req, handle, modeled, measured)
+        sp = getattr(handle, "_span", None)
+        if sp is not None:
+            self._finish_request_span(sp, handle, stats, blocked, compute,
+                                      measured)
         if t >= self.warmup:
             meter.add(handle.wire_s + queue, handle.wait_s, blocked,
                       compute)
+
+    def _finish_request_span(self, sp, handle, stats, blocked, compute,
+                             measured) -> None:
+        """Finalize the request span opened at issue time: children at
+        explicit offsets from the handle's *modeled* breakdown (wire,
+        retry penalty, virtual queue, service slot, push wire), measured
+        wall times riding along as replay-variant evidence."""
+        src_cfg = getattr(self.source, "config", None)
+        svc = getattr(src_cfg, "service_model_s", 0.0)
+        wire, wait = handle.wire_s, handle.wait_s
+        vq = getattr(handle, "vqueue_s", 0.0)
+        pull_end = wire + wait + vq
+        push_wire = stats.get("push_wire_s", 0.0)
+        sp.set(v_dur=pull_end + svc + push_wire, wall_s=measured,
+               fresh=handle.fresh_entries, stale=handle.stale_entries)
+        pull = sp.child("pull", 0.0, pull_end, wall_s=blocked,
+                        inter_bytes=handle.inter_bytes)
+        if wire > 0:
+            pull.child("wire", 0.0, wire)
+        if wait > 0:
+            pull.child("retry", wire, wait)
+        if vq > 0:
+            pull.child("queue", wire + wait, vq)
+        sp.child("compute", pull_end, svc, wall_s=compute,
+                 loss=stats.get("loss"))
+        sp.child("push", pull_end + svc, push_wire,
+                 inter_bytes=stats.get("push_inter_bytes", 0))

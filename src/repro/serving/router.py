@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..obs.trace import trace_instant
+
 __all__ = ["Router"]
 
 
@@ -48,6 +50,7 @@ class Router:
         self.version = cluster.placement_version
         self.k = cluster.k
         self.pools = [np.asarray(rows) for rows in cluster.rows]
+        trace_instant("router.refresh", version=self.version, k=self.k)
         return True
 
     def set_weights(self, weights) -> None:

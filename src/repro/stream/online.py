@@ -141,7 +141,8 @@ class StreamSession:
     drift repair lands).
     """
 
-    def __init__(self, config: ParsaStreamConfig, num_v: int):
+    def __init__(self, config: ParsaStreamConfig, num_v: int, obs=None):
+        self.obs = obs   # repro.obs.Observability hook; None = off
         if config.workers > 1:
             # fail at construction, not mid-stream
             from ..core.jax_partition import resolve_worker_devices
@@ -233,7 +234,11 @@ class StreamSession:
             t0 = time.perf_counter()
             traffic = None
             if self.config.workers == 1:
-                _count_dispatch("stream_feed_scan")
+                _count_dispatch(
+                    "stream_feed_scan",
+                    nbytes=(int(self.arena.s_masks.nbytes)
+                            + int(self.arena.sizes.nbytes)),
+                    k=self.k)
                 parts_blocks, s_out, sz_out = _partition_scan(
                     jnp.asarray(packed.valid), jnp.asarray(packed.widx),
                     jnp.asarray(packed.vals), jnp.asarray(packed.trunc),
@@ -269,12 +274,41 @@ class StreamSession:
         self.n_feeds += 1
         timings["total"] = time.perf_counter() - t_total
         dispatches = {name: c for name, c in counts.items() if c}
+        if self.obs is not None:
+            self._trace_feed(n, u_start, u_stop, timings,
+                             repartitioned=migration is not None)
         return StreamUpdate(
             chunk=self.n_feeds - 1, u_start=u_start, u_stop=u_stop,
             parts=self.parts[u_start:u_stop].copy(), metrics=metrics,
             drift=decision, repartitioned=migration is not None,
             migration=migration, traffic=traffic, timings=timings,
             dispatches=dispatches)
+
+    def _trace_feed(self, n: int, u_start: int, u_stop: int,
+                    timings: dict, repartitioned: bool) -> None:
+        """Emit the ``feed → pack/scan(/merge)/metrics`` span tree.
+
+        A feed has no modeled duration (it is host work, not a priced
+        transfer), so the span occupies one fixed virtual unit with
+        children at fixed fractions — deterministic across replays — and
+        the measured phase seconds attached as ``wall_s`` evidence."""
+        tr = self.obs.tracer
+        sp = tr.begin("feed", v_start=tr.now, v_dur=1.0, track="stream",
+                      feed=self.n_feeds - 1, rows=n, u_start=u_start,
+                      u_stop=u_stop, k=self.k,
+                      wall_s=timings.get("total"))
+        sp.child("pack", 0.0, 0.25, wall_s=timings.get("pack"))
+        sp.child("scan", 0.25, 0.45, wall_s=timings.get("partition_u"),
+                 workers=self.config.workers)
+        if self.config.workers > 1:
+            # the all_gather + OR union-push folded into the parallel scan
+            sp.child("merge", 0.7, 0.1,
+                     merge_every=self.config.base.merge_every)
+        sp.child("metrics", 0.8, 0.1, wall_s=timings.get("metrics"))
+        if repartitioned:
+            sp.child("repartition", 0.9, 0.1,
+                     wall_s=timings.get("repartition"))
+        tr.advance(1.0)
 
     def _feed_parallel(self, packed, n: int,
                        worker_weights: np.ndarray | None = None):
@@ -338,7 +372,8 @@ class StreamSession:
     def _popcount_metrics(self) -> PartitionMetrics:
         """Objectives (4)/(6) (+ the parts_v=None traffic convention) from
         the live packed sets — one tiny device launch, O(k·W)."""
-        _count_dispatch("stream_metrics")
+        _count_dispatch("stream_metrics",
+                        nbytes=int(self.arena.s_masks.nbytes))
         sizes, footprint = _popcount_rows(self.arena.s_masks,
                                           self.arena.sizes)
         sizes = np.asarray(sizes).astype(np.int64)

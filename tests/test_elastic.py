@@ -62,9 +62,11 @@ def test_grow_one_dispatch_and_consistency():
     with dispatch_counter() as counts:
         op = sess.grow_k(force=True)
     assert op.committed and sess.k == k0 + 1
-    assert counts["elastic_grow_scan"] == 1
-    assert sum(v for n, v in counts.items()
-               if "scan" in n) == 1, "grow must be O(1) jitted dispatches"
+    # labeled records: exactly one grow scan, tagged with the split source
+    scans = [r for r in counts.records if "scan" in r.phase]
+    assert [r.phase for r in scans] == ["elastic_grow_scan"], \
+        "grow must be O(1) jitted dispatches"
+    assert scans[0].nbytes > 0 and scans[0].meta["machine"] == op.machine
     after = np.bincount(sess.parts, minlength=sess.k)
     # only the split source lost rows; the new machine hosts the rest
     assert after[op.machine] + after[k0] == before[op.machine]
@@ -82,6 +84,7 @@ def test_shrink_zero_scans_and_consistency():
         op = sess.shrink_k(force=True)
     assert op.committed and sess.k == k0 - 1
     assert sum(v for n, v in counts.items() if "scan" in n) == 0
+    assert not any("scan" in r.phase for r in counts.records)
     assert op.traffic.migration_bytes > 0
     assert sess.parts.max() < sess.k
     # merged masks = OR of the merged parts' need sets: still exact
@@ -100,8 +103,10 @@ def test_repair_one_dispatch_refills_lost_machine():
     assert lost_rows > 0
     with dispatch_counter() as counts:
         op = sess.repair(lost)
-    assert counts["elastic_repair_scan"] == 1
-    assert sum(v for n, v in counts.items() if "scan" in n) == 1
+    # labeled records: exactly one repair scan, tagged with the lost slot
+    scans = [r for r in counts.records if "scan" in r.phase]
+    assert [r.phase for r in scans] == ["elastic_repair_scan"]
+    assert scans[0].meta["machine"] == lost and scans[0].meta["rows"] > 0
     assert op.mode == "warm" and op.moved_u == lost_rows
     assert op.traffic.migration_bytes > 0
     # with frac=0 the live sets stay exact need sets after the repair

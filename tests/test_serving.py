@@ -65,8 +65,15 @@ def test_engine_smoke_one_dispatch_per_request(serving_graph, prefetch):
     with dispatch_counter() as counts:
         s = engine.run(n)
     # O(1) jitted dispatches per request: one pull issue + one serve step
-    assert counts["serving_pull"] == n, counts
-    assert counts["serving_compute"] == n, counts
+    # (labeled records: per-request home + payload bytes ride along)
+    phases = [r.phase for r in counts.records]
+    assert phases.count("serving_pull") == n, counts
+    assert phases.count("serving_compute") == n, counts
+    for r in counts.records:
+        if r.phase == "serving_pull":
+            assert "home" in r.meta and r.nbytes >= 0
+        elif r.phase == "serving_compute":
+            assert r.nbytes > 0 and r.meta.get("tokens", 0) > 0
     assert s["mode"] == ("async" if prefetch else "sync")
     assert s["requests"] == n - warmup
     assert s["examples"] == 32 * (n - warmup)   # one 32-row tenant
